@@ -1,0 +1,47 @@
+"""Fig. 3: delays in JCT for Megha vs Sparrow/Eagle/Pigeon on trace-like
+workloads (Yahoo @ 3000 workers, Google @ 13000 — scaled for CPU wall-time,
+use --full for paper-sized runs)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim.simulator import run_simulation
+from repro.workload.synth import google_like_trace, yahoo_like_trace
+
+SCHEDULERS = ("megha", "sparrow", "eagle", "pigeon")
+
+
+def run(full: bool = False) -> list[str]:
+    if full:
+        wls = [
+            (yahoo_like_trace(), 3000),
+            (google_like_trace(), 13000),
+        ]
+    else:
+        wls = [
+            (yahoo_like_trace(num_jobs=1200, total_tasks=25000, load=0.85,
+                              num_workers=1504, seed=1), 1504),
+            (google_like_trace(num_jobs=800, total_tasks=16000, load=0.85,
+                               num_workers=2496, seed=2), 2496),
+        ]
+    rows = []
+    for wl, workers in wls:
+        res = {}
+        for s in SCHEDULERS:
+            t0 = time.time()
+            m = run_simulation(s, wl, num_workers=workers)
+            dt = (time.time() - t0) * 1e6 / max(1, wl.num_tasks)
+            sm = m.summary()
+            res[s] = sm
+            for cls in ("all", "short", "long"):
+                rows.append(
+                    f"fig3_{wl.name}_{s}_{cls},{dt:.2f},"
+                    f"median={sm[f'{cls}_median_delay']:.5f};"
+                    f"p95={sm[f'{cls}_p95_delay']:.5f};"
+                    f"mean={sm[f'{cls}_mean_delay']:.5f}"
+                )
+        for other in ("sparrow", "eagle", "pigeon"):
+            f = res[other]["all_mean_delay"] / max(1e-9, res["megha"]["all_mean_delay"])
+            rows.append(f"fig3_{wl.name}_megha_vs_{other},0,reduction_factor={f:.2f}")
+    return rows

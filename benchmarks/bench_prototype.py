@@ -1,0 +1,60 @@
+"""Fig. 4: prototype-style comparison — Megha (3 GM / 3 LM, heartbeat 10 s)
+vs Pigeon on down-sampled Yahoo/Google traces, 480 scheduling units."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.metrics import percentile
+from repro.sim.simulator import run_simulation
+from repro.workload.synth import downsampled, google_like_trace, yahoo_like_trace
+
+
+def run(full: bool = False) -> list[str]:
+    base_y = yahoo_like_trace(num_jobs=79200 if full else 900,
+                              total_tasks=96300 if full else 4500,
+                              load=0.8, num_workers=480, seed=21)
+    base_g = google_like_trace(num_jobs=78400 if full else 800,
+                               total_tasks=304100 if full else 4000,
+                               load=0.8, num_workers=480, seed=22)
+    # arrivals tuned so the scaled runs sit at contended load like the
+    # paper's prototype (uncontended runs make every 3-hop scheduler tie)
+    wl_y = downsampled(base_y, factor=100 if full else 4,
+                       mean_iat=1.0 if full else 0.05, seed=23)
+    wl_g = downsampled(base_g, factor=100 if full else 4,
+                       mean_iat=1.0 if full else 0.05, seed=24)
+    # Contended variant: the faithful down-sampled load is so light that
+    # every 3-hop scheduler ties (the paper's Fig. 4 prototype gap comes from
+    # container creation/interference — d_exec — which no simulator sees,
+    # §4.1).  A long-heavy near-saturation trace exposes the architectural
+    # difference the paper highlights: Pigeon's reserved high-priority
+    # workers idle while long tasks queue, producing Fig. 4's long tail.
+    from repro.workload.synth import _trace_like
+
+    hot = _trace_like("longheavy", num_jobs=300, total_tasks=3000, load=0.96,
+                      num_workers=480, seed=31, long_fraction=0.5)
+    rows = []
+    for wl, tag in ((wl_y, "yahoo_ds"), (wl_g, "google_ds"),
+                    (hot, "longheavy_contended")):
+        res = {}
+        for s in ("megha", "pigeon"):
+            kw = dict(num_gms=3, num_lms=3, heartbeat_interval=10.0) if s == "megha" else {}
+            t0 = time.time()
+            m = run_simulation(s, wl, num_workers=480, **kw)
+            dt = (time.time() - t0) * 1e6 / max(1, wl.num_tasks)
+            d = m.job_delays()
+            res[s] = d
+            rows.append(
+                f"fig4_{tag}_{s},{dt:.2f},"
+                f"median={percentile(d, 50):.5f};p95={percentile(d, 95):.5f};"
+                f"p99={percentile(d, 99):.5f};max={max(d):.5f};"
+                f"inconsistency_ratio={m.inconsistency_ratio:.5f}"
+            )
+        med = percentile(res["pigeon"], 50) / max(1e-9, percentile(res["megha"], 50))
+        p95 = percentile(res["pigeon"], 95) / max(1e-9, percentile(res["megha"], 95))
+        tail = max(res["pigeon"]) / max(1e-9, max(res["megha"]))
+        rows.append(
+            f"fig4_{tag}_improvement,0,median_factor={med:.2f};"
+            f"p95_factor={p95:.2f};tail_factor={tail:.2f}"
+        )
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 2: Megha's p95 JCT delay (2a) and inconsistency ratio (2b) under
+different loads and DC sizes (paper sweeps 10k-50k; scaled here)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim.simulator import run_simulation
+from repro.workload.synth import synthetic_trace
+
+LOADS = (0.2, 0.5, 0.8, 0.95)
+DC_SIZES = (1024, 4096)
+DC_SIZES_FULL = (10_000, 30_000, 50_000)
+
+
+def run(full: bool = False) -> list[str]:
+    rows = []
+    sizes = DC_SIZES_FULL if full else DC_SIZES
+    jobs = 200 if full else 60
+    tpj = 1000 if full else 128
+    for workers in sizes:
+        for load in LOADS:
+            wl = synthetic_trace(num_jobs=jobs, tasks_per_job=tpj, load=load,
+                                 num_workers=workers, seed=13)
+            t0 = time.time()
+            m = run_simulation("megha", wl, num_workers=workers)
+            dt = (time.time() - t0) * 1e6 / max(1, wl.num_tasks)
+            sm = m.summary()
+            rows.append(
+                f"fig2_dc{workers}_load{load:g},{dt:.2f},"
+                f"p95={sm['all_p95_delay']:.5f};median={sm['all_median_delay']:.5f};"
+                f"inconsistency_ratio={sm['inconsistency_ratio']:.5f}"
+            )
+    return rows

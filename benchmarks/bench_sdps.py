@@ -1,0 +1,59 @@
+"""§2.3.2 scalability: scheduling decisions per second.
+
+Hydra reports 30-40k SDPS; Sparrow-class workloads need ~1M SDPS on 10k
+workers.  We measure (a) the event-driven Megha simulator and (b) the
+vectorized fast path (Pallas match kernel / jnp oracle) on 10k-50k-worker
+bitmaps, batched 512 decisions per round.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastpath as FP
+from repro.sim.simulator import run_simulation
+from repro.workload.synth import synthetic_trace
+
+
+def _fastpath_sdps(workers: int, use_pallas: bool, rounds: int = 20) -> float:
+    workers = (workers // 64) * 64  # divisible into the 8x8 partition grid
+    orders = FP.make_orders(workers, 8, 8, seed=0)
+    truth = jnp.ones((workers,), bool)
+    view = jnp.ones((workers,), bool)
+    n = 512
+    # warmup/compile
+    r = FP.gm_round(truth, view, orders[0], n, max_tasks=512, use_pallas=use_pallas)
+    jax.block_until_ready(r.truth)
+    t0 = time.time()
+    decisions = 0
+    for i in range(rounds):
+        r = FP.gm_round(truth, view, orders[i % 8], n, max_tasks=512,
+                        use_pallas=use_pallas)
+        decisions += n
+        # free everything again so the pool never empties
+        truth = FP.gm_round(truth, view, orders[i % 8], 0, max_tasks=512).truth
+    jax.block_until_ready(r.truth)
+    dt = time.time() - t0
+    return decisions / dt
+
+
+def run(full: bool = False) -> list[str]:
+    rows = []
+    sizes = (10_000, 50_000) if not full else (10_000, 30_000, 50_000)
+    for w in sizes:
+        for use_pallas, tag in ((False, "jnp"), (True, "pallas_interpret")):
+            sdps = _fastpath_sdps(w, use_pallas)
+            rows.append(
+                f"sdps_fastpath_{tag}_w{w},{1e6/max(1,sdps):.2f},decisions_per_s={sdps:.0f}"
+            )
+    # event-driven simulator SDPS (pure python reference)
+    wl = synthetic_trace(num_jobs=40, tasks_per_job=200, load=0.7, num_workers=2048)
+    t0 = time.time()
+    m = run_simulation("megha", wl, num_workers=2048)
+    dt = time.time() - t0
+    sdps = len(m.tasks) / dt
+    rows.append(f"sdps_event_sim,{1e6/max(1,sdps):.2f},decisions_per_s={sdps:.0f}")
+    return rows

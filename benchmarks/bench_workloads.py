@@ -1,0 +1,33 @@
+"""Table 1: workload statistics of the generated traces."""
+
+from __future__ import annotations
+
+from repro.workload.synth import (
+    downsampled,
+    google_like_trace,
+    synthetic_trace,
+    yahoo_like_trace,
+)
+
+
+def run(full: bool = False) -> list[str]:
+    wls = [
+        yahoo_like_trace(num_jobs=2426 if not full else 24262,
+                         total_tasks=96833 if not full else 968335,
+                         load=0.8, num_workers=3000, seed=1),
+        google_like_trace(num_jobs=1000 if not full else 10000,
+                          total_tasks=31255 if not full else 312558,
+                          load=0.8, num_workers=13000, seed=2),
+        synthetic_trace(num_jobs=200 if not full else 2000, tasks_per_job=1000,
+                        load=0.8, num_workers=10000),
+    ]
+    wls.append(downsampled(wls[0], factor=100))
+    wls.append(downsampled(wls[1], factor=100))
+    rows = []
+    for wl in wls:
+        s = wl.stats()
+        rows.append(
+            f"table1_{wl.name},0,jobs={s['num_jobs']};tasks={s['num_tasks']};"
+            f"mean_dur={s['mean_task_duration']:.3f};mean_iat={s['mean_iat']:.4f}"
+        )
+    return rows

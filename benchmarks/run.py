@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  --full runs paper-sized
+configurations (hours on CPU); default is scaled for CI wall-time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: comparison,scalability,"
+                         "prototype,sdps,workloads,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_comparison,
+        bench_kernels,
+        bench_prototype,
+        bench_scalability,
+        bench_sdps,
+        bench_workloads,
+    )
+
+    suites = {
+        "workloads": bench_workloads,
+        "scalability": bench_scalability,
+        "comparison": bench_comparison,
+        "prototype": bench_prototype,
+        "sdps": bench_sdps,
+        "kernels": bench_kernels,
+    }
+    picked = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for name in picked:
+        t0 = time.time()
+        for row in suites[name].run(full=args.full):
+            print(row)
+        print(f"suite_{name}_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

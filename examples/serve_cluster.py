@@ -1,0 +1,21 @@
+"""Serve a small model with batched requests, scheduled by Megha.
+
+Demonstrates the paper's architecture as the control plane of an inference
+fleet: 2 pods x 16 decode slots, 2 GM frontends with eventually-consistent
+views, real KV-cache decode on the slots (tiny qwen-family model).
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += [
+            "--arch", "qwen15_05b", "--requests", "120",
+            "--pods", "2", "--slots", "16", "--frontends", "2",
+            "--real-decode",
+        ]
+    main()

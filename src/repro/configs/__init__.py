@@ -1,0 +1,25 @@
+from repro.configs.base import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    ShapeCell,
+    SHAPES,
+    applicable_shapes,
+    get_config,
+    list_archs,
+    smoke_config,
+)
+
+__all__ = [
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "SSMConfig",
+    "ShapeCell",
+    "SHAPES",
+    "applicable_shapes",
+    "get_config",
+    "list_archs",
+    "smoke_config",
+]

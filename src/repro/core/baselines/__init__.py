@@ -1,0 +1,12 @@
+from repro.core.baselines.sparrow import Sparrow, SparrowConfig
+from repro.core.baselines.eagle import Eagle, EagleConfig
+from repro.core.baselines.pigeon import Pigeon, PigeonConfig
+
+__all__ = [
+    "Sparrow",
+    "SparrowConfig",
+    "Eagle",
+    "EagleConfig",
+    "Pigeon",
+    "PigeonConfig",
+]

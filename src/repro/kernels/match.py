@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the Megha GM match operation.
+
+The GM's hot loop — "walk my priority-ordered view of up to 50k workers and
+hand the next free worker to each queued task" (§3.2) — is a sequential
+pointer chase in the paper's Python prototype.  On TPU we reformulate it as a
+*rank-and-select*: a prefix-sum over the availability bit-vector gives every
+free worker its task rank in one data-parallel pass.  This is VPU work (no
+MXU): the natural TPU mapping is a grid-strided blocked scan with a scalar
+carry in SMEM.
+
+Layout: the 1-D worker axis is reshaped to (rows, 128) so each VMEM block is
+a hardware-aligned (block_rows, 128) tile.  The grid walks row-blocks in
+order; ``carry_ref`` (SMEM) accumulates the running count of free workers so
+block b's local cumsum becomes a global rank.  TPU grid iteration is
+sequential on a core, which makes the scalar carry safe — this is the
+standard TPU alternative to a GPU decoupled-lookback scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _match_kernel(n_tasks_ref, avail_ref, out_ref, carry_ref):
+    """One (block_rows, 128) tile of the blocked rank-and-select scan."""
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    a = avail_ref[...].astype(jnp.int32)  # (block_rows, 128)
+    flat = a.reshape(-1)
+    # rank within this block (inclusive scan -> 0-based)
+    local = jnp.cumsum(flat) - 1
+    rank = local + carry_ref[0]
+    n = n_tasks_ref[0]
+    take = (flat > 0) & (rank < n)
+    out_ref[...] = jnp.where(take, rank, -1).reshape(a.shape)
+    carry_ref[0] = carry_ref[0] + jnp.sum(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def match_ranks(
+    avail: jax.Array,
+    n_tasks: jax.Array | int,
+    *,
+    block_rows: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-worker task ranks via the Pallas blocked-scan kernel.
+
+    Args:
+      avail: int8/int32/bool[W] availability in GM priority order; W padded
+        to a multiple of ``block_rows * 128`` internally.
+      n_tasks: tasks to place (dynamic scalar ok).
+      block_rows: sublane rows per VMEM block; the block is
+        (block_rows, 128) int8 = block_rows*128 bytes — e.g. 64 rows = 8 KiB
+        in, 32 KiB out, far under the ~16 MiB VMEM budget, leaving room for
+        double buffering.
+      interpret: run in interpret mode (CPU correctness); False on real TPU.
+
+    Returns: int32[W] task rank per ordered worker position, -1 if none.
+    """
+    w = avail.shape[0]
+    block = block_rows * LANES
+    w_pad = -(-w // block) * block
+    a = jnp.zeros((w_pad,), jnp.int8).at[:w].set(avail.astype(jnp.int8))
+    a2 = a.reshape(w_pad // LANES, LANES)
+    n = jnp.asarray(n_tasks, jnp.int32).reshape(1)
+
+    grid = (w_pad // block,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # n_tasks rides in SMEM ahead of the grid
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda b, n: (b, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda b, n: (b, 0)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        _match_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w_pad // LANES, LANES), jnp.int32),
+        interpret=interpret,
+    )(n, a2)
+    return out.reshape(-1)[:w]

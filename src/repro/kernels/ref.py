@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``match_ranks_ref`` is the reference semantics of the GM match operation's
+hot core (see ``match.py``); ``match_tasks_ref`` is the full user-facing op
+(rank + inverse scatter) the ``ops.py`` wrappers are validated against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def match_ranks_ref(avail: jax.Array, n_tasks: jax.Array | int) -> jax.Array:
+    """Per-worker task rank for the GM match operation.
+
+    Args:
+      avail: int8/bool[W] — 1 where the (priority-ordered) worker is free in
+        the GM's view.  Position i is the i-th worker the GM would try
+        (internal partitions first, then external; GM-specific shuffle is
+        baked into the ordering by the caller).
+      n_tasks: number of tasks to place.
+
+    Returns:
+      int32[W]: for each ordered worker position, the task index assigned to
+      it, or -1 if the worker is busy or all tasks were already placed.
+    """
+    a = avail.astype(jnp.int32)
+    rank = jnp.cumsum(a) - 1  # inclusive scan -> 0-based rank among free
+    take = (a > 0) & (rank < jnp.asarray(n_tasks, jnp.int32))
+    return jnp.where(take, rank, -1)
+
+
+def match_tasks_ref(
+    avail: jax.Array, n_tasks: jax.Array | int, max_tasks: int
+) -> tuple[jax.Array, jax.Array]:
+    """Full match: task -> ordered-worker-position assignment.
+
+    Returns:
+      assignment: int32[max_tasks] — ordered worker position for each task,
+        -1 where unplaced (not enough free workers or task >= n_tasks).
+      placed: int32[] — number of tasks actually placed.
+    """
+    ranks = match_ranks_ref(avail, n_tasks)
+    w = avail.shape[0]
+    out = jnp.full((max_tasks,), -1, jnp.int32)
+    positions = jnp.arange(w, dtype=jnp.int32)
+    # scatter: out[rank] = position; -1 ranks are remapped out-of-bounds so
+    # mode="drop" discards them (index -1 would wrap to the last element)
+    idx = jnp.where(ranks >= 0, ranks, max_tasks)
+    out = out.at[idx].set(positions, mode="drop")
+    placed = jnp.sum((ranks >= 0).astype(jnp.int32))
+    return out, placed
+
+
+def verify_ref(truth: jax.Array, assignment: jax.Array) -> jax.Array:
+    """LM-side verification oracle: for each assigned worker position, is it
+    *actually* free in the LM's ground truth?  -1 assignments are invalid."""
+    safe = jnp.clip(assignment, 0, truth.shape[0] - 1)
+    ok = truth.astype(jnp.bool_)[safe]
+    return ok & (assignment >= 0)

@@ -1,0 +1,386 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the production mesh, abstract parameters /
+optimizer state / caches (ShapeDtypeStructs — no allocation), jits the step
+with explicit in/out shardings, lowers, compiles, and records:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits),
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the compiled HLO text,
+  * the three roofline terms + dominant bottleneck.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.sharding import (
+    batch_axes,
+    batch_pspecs,
+    cache_pspecs,
+    model_pspecs,
+    named,
+)
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import decode as D
+from repro.models import model as M
+from repro.models.schema import abstract_params, param_bytes
+from repro.roofline import analysis as R
+from repro.roofline import traffic as T
+from repro.train import loop as TL
+from repro.train import optimizer as O
+
+# FSDP threshold: shard params/optimizer over 'data' too once fp32 params +
+# moments would exceed a single model-parallel shard's HBM share.
+FSDP_PARAM_BYTES = 8e9
+
+
+def _opt_for(cfg: ModelConfig) -> O.OptConfig:
+    moment_dtype = jnp.bfloat16 if cfg.param_dtype == jnp.bfloat16 else jnp.float32
+    return O.OptConfig(moment_dtype=moment_dtype)
+
+
+def _use_fsdp(cfg: ModelConfig) -> bool:
+    return param_bytes(M.model_schema(cfg)) > FSDP_PARAM_BYTES
+
+
+def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *, fsdp=None):
+    """Build + lower one cell. Returns (lowered, meta)."""
+    if fsdp is None:
+        fsdp = _use_fsdp(cfg)
+    bspec_tree = batch_pspecs(cfg, cell, mesh)
+    batch_sds = D.input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        opt = _opt_for(cfg)
+        step = TL.make_train_step(cfg, opt)
+        state_sds = TL.abstract_train_state(cfg, opt)
+        state_specs = TL.train_state_pspecs(cfg, mesh, fsdp=fsdp)
+        metric_specs = {"loss": P(), "grad_norm": P(), "step": P()}
+        jitted = jax.jit(
+            step,
+            in_shardings=(named(mesh, state_specs), named(mesh, bspec_tree)),
+            out_shardings=(named(mesh, state_specs), named(mesh, metric_specs)),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = jitted.lower(state_sds, batch_sds)
+    elif cell.kind == "prefill":
+        pspecs = model_pspecs(cfg, mesh, fsdp=fsdp)
+        params_sds = abstract_params(M.model_schema(cfg))
+        out_spec = P(batch_axes(mesh), "model")
+
+        def step(params, batch):
+            return M.logits_last(params, batch, cfg)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(named(mesh, pspecs), named(mesh, bspec_tree)),
+            out_shardings=named(mesh, out_spec),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, batch_sds)
+    else:  # decode
+        pspecs = model_pspecs(cfg, mesh, fsdp=False)  # decode never FSDPs
+        params_sds = abstract_params(M.model_schema(cfg))
+        cspec_tree = cache_pspecs(cfg, mesh, cell.global_batch, cell.seq_len)
+        cache_sds = D.cache_spec(cfg, cell.global_batch, cell.seq_len)
+        sizes = mesh_axis_sizes(mesh)
+        vshard = "model" if cfg.padded_vocab % sizes["model"] == 0 else None
+        ba = batch_axes(mesh)
+        n_dp = 1
+        for a in (ba if isinstance(ba, tuple) else (ba,)):
+            n_dp *= sizes[a]
+        bshard = ba if cell.global_batch % n_dp == 0 else None
+        out_specs = (P(bshard, vshard), cspec_tree)
+
+        def step(params, cache, batch):
+            return D.decode_step(params, cache, batch, cfg)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                named(mesh, pspecs),
+                named(mesh, cspec_tree),
+                named(mesh, bspec_tree),
+            ),
+            out_shardings=named(mesh, out_specs),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, cache_sds, batch_sds)
+    return lowered, {"fsdp": bool(fsdp)}
+
+
+def _memory_bytes(compiled) -> float:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return float("nan")
+    if ma is None:
+        return float("nan")
+    for attrs in (
+        ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes"),
+    ):
+        try:
+            return float(sum(getattr(ma, a) for a in attrs)) - float(
+                getattr(ma, "alias_size_in_bytes", 0)
+            )
+        except Exception:
+            continue
+    return float("nan")
+
+
+def unit_count(cfg: ModelConfig) -> int:
+    """Number of repeated layer-units (for cost extrapolation)."""
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.moe and cfg.moe.first_k_dense:
+        return cfg.num_layers - cfg.moe.first_k_dense
+    return cfg.num_layers
+
+
+def reduced_cfg(cfg: ModelConfig, units: int, cell: ShapeCell) -> ModelConfig:
+    """Unrolled, exact-cost variant with ``units`` layer-units.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so scanned layers (and the chunked-CE scan) are undercounted in
+    the full module.  The dry-run therefore compiles u=1 and u=2 unrolled
+    variants and extrapolates linearly — exact for homogeneous stacks.
+    """
+    kw: dict = {"scan_layers": False}
+    if cfg.family == "hybrid":
+        groups, per, tail = M.hybrid_layout(cfg)
+        kw["num_layers"] = units * per + tail
+    elif cfg.moe and cfg.moe.first_k_dense:
+        kw["num_layers"] = cfg.moe.first_k_dense + units
+    else:
+        kw["num_layers"] = units
+    if cell.kind == "train":
+        kw["loss_chunk"] = cell.seq_len  # single CE chunk: no scan undercount
+    return dataclasses.replace(cfg, **kw)
+
+
+def _module_cost(cfg: ModelConfig, cell: ShapeCell, mesh, fsdp) -> dict:
+    lowered, _ = lower_cell(cfg, cell, mesh, fsdp=fsdp)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = R.collective_bytes(hlo)
+    byts = float(
+        cost.get("bytes accessed", 0.0)
+        or sum(v for k, v in cost.items() if k.startswith("bytes accessed"))
+    )
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": byts,
+        "coll_bytes": float(coll.total_bytes),
+        "coll_counts": dict(coll.counts),
+    }
+
+
+def _extrapolate(c1: dict, c2: dict, units: int) -> dict:
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        slope = c2[k] - c1[k]
+        out[k] = c1[k] + slope * (units - 1)
+    out["coll_counts"] = {
+        k: int(c1["coll_counts"][k] + (c2["coll_counts"][k] - c1["coll_counts"][k]) * (units - 1))
+        for k in c1["coll_counts"]
+    }
+    return out
+
+
+def _resident_bytes(sds_tree, spec_tree, mesh) -> float:
+    """Exact per-device resident bytes of a (state/cache) pytree under its
+    PartitionSpecs: sum of local shard sizes."""
+    import math as _m
+
+    from jax.sharding import NamedSharding
+
+    total = 0.0
+    sds_leaves = jax.tree.leaves(sds_tree)
+    spec_leaves = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    for sds, spec in zip(sds_leaves, spec_leaves):
+        local = NamedSharding(mesh, spec).shard_shape(sds.shape)
+        total += _m.prod(local) * jnp.dtype(sds.dtype).itemsize
+    return total
+
+
+def _activation_resident(cfg: ModelConfig, cell: ShapeCell, mesh) -> float:
+    """Scan+remat stores one [B_loc, S, d] residual per layer plus ~4x one
+    layer's working set."""
+    sizes = mesh_axis_sizes(mesh)
+    dp = 1
+    ba = batch_axes(mesh)
+    for a in (ba if isinstance(ba, tuple) else (ba,)):
+        dp *= sizes[a]
+    b_loc = cell.global_batch / dp if cell.global_batch % dp == 0 else cell.global_batch
+    s = cell.seq_len if cell.kind != "decode" else 1
+    act = b_loc * s * cfg.d_model * 2.0
+    if cell.kind == "train":
+        return cfg.num_layers * act + 8.0 * act
+    return 4.0 * act
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir=None, verbose=True):
+    cfg = get_config(arch)
+    cell = next(c for c in SHAPES if c.name == shape)
+    for c, reason in applicable_shapes(cfg):
+        if c.name == shape and reason is not None:
+            result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                      "skipped": reason}
+            if out_dir:
+                _write(out_dir, result)
+            if verbose:
+                print(f"SKIP {arch}/{shape}/{mesh_name}: {reason}")
+            return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    fsdp = _use_fsdp(cfg) if cell.kind == "train" else False
+
+    # 1) full production module (scan-over-layers): memory analysis + proof
+    #    of lowering/compile at the real depth.
+    lowered, meta = lower_cell(cfg, cell, mesh, fsdp=fsdp)
+    compiled = lowered.compile()
+    mem_xla = _memory_bytes(compiled)
+    del lowered, compiled
+
+    # exact per-device resident state from shardings + activation estimate
+    opt = _opt_for(cfg)
+    if cell.kind == "train":
+        state_res = _resident_bytes(
+            TL.abstract_train_state(cfg, opt),
+            TL.train_state_pspecs(cfg, mesh, fsdp=fsdp), mesh,
+        )
+    elif cell.kind == "prefill":
+        state_res = _resident_bytes(
+            abstract_params(M.model_schema(cfg)),
+            model_pspecs(cfg, mesh, fsdp=fsdp), mesh,
+        )
+    else:
+        state_res = _resident_bytes(
+            abstract_params(M.model_schema(cfg)),
+            model_pspecs(cfg, mesh, fsdp=False), mesh,
+        ) + _resident_bytes(
+            D.cache_spec(cfg, cell.global_batch, cell.seq_len),
+            cache_pspecs(cfg, mesh, cell.global_batch, cell.seq_len), mesh,
+        )
+    mem = state_res + _activation_resident(cfg, cell, mesh)
+
+    # 2) exact per-layer costs from unrolled u=1 / u=2 modules.
+    units = unit_count(cfg)
+    c1 = _module_cost(reduced_cfg(cfg, 1, cell), cell, mesh, fsdp)
+    c2 = _module_cost(reduced_cfg(cfg, 2, cell), cell, mesh, fsdp)
+    cost = _extrapolate(c1, c2, units)
+
+    total, active = M.param_counts(cfg)
+    mf = R.model_flops(cfg, cell, total, active)
+    # memory term: analytic fused-traffic model (XLA:CPU bytes are unfused
+    # and overestimate TPU HBM traffic 10-50x; kept as diagnostic below)
+    moment_bytes = 2 if cfg.param_dtype == jnp.bfloat16 else 4
+    fused_bytes = T.analytic_memory_bytes(
+        cfg, cell, mesh_axis_sizes(mesh), fsdp=fsdp, moment_bytes=moment_bytes
+    )
+    roof = R.analyze(
+        arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+        cost={"flops": cost["flops"], "bytes accessed": fused_bytes},
+        hlo_text="", model_flops_fleet=mf,
+        memory_per_device_bytes=mem,
+    )
+    # patch in the extrapolated collective terms (hlo_text was empty above)
+    roof.collective_gbytes = cost["coll_bytes"] / 1e9
+    roof.collective_s = cost["coll_bytes"] / R.ICI_BW
+    roof.collective_counts = cost["coll_counts"]
+    terms = {"compute": roof.compute_s, "memory": roof.memory_s,
+             "collective": roof.collective_s}
+    roof.bottleneck = max(terms, key=terms.get)
+    roof.step_time_s = max(terms.values())
+    roof.roofline_fraction = roof.compute_s / roof.step_time_s if roof.step_time_s else 0.0
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+        "params_total": total, "params_active": active, **meta,
+        "units": units,
+        "xla_unfused_gbytes": cost["bytes"] / 1e9,
+        "xla_memory_analysis_gb": mem_xla / 1e9,
+        "roofline": json.loads(roof.to_json()),
+    }
+    if verbose:
+        print(
+            f"OK {arch}/{shape}/{mesh_name}: mem/dev={mem/1e9:.2f}GB "
+            f"flops/chip={roof.hlo_gflops:.1f}G bytes/chip={roof.hlo_gbytes:.1f}G "
+            f"coll/chip={roof.collective_gbytes:.3f}G bottleneck={roof.bottleneck} "
+            f"terms(c/m/x)=({roof.compute_s:.4f}/{roof.memory_s:.4f}/{roof.collective_s:.4f})s"
+        )
+    if out_dir:
+        _write(out_dir, result)
+    return result
+
+
+def _write(out_dir, result) -> None:
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    (out / name).write_text(json.dumps(result, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or args.shape is None else [args.shape]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                try:
+                    run_cell(arch, shape, mesh_name, out_dir=args.out)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    traceback.print_exc()
+                    _write(args.out, {"arch": arch, "shape": shape,
+                                      "mesh": mesh_name, "error": repr(e)})
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver: measure named variants of the three chosen cells.
+
+For each (cell, variant) it compiles u=1/u=2 unrolled modules, extrapolates
+FLOPs/bytes/collectives to full depth, recomputes the analytic memory term,
+and appends a row to experiments/perf/hillclimb.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--only arctic,zamba,llama]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import (
+    _module_cost,
+    _use_fsdp,
+    reduced_cfg,
+    unit_count,
+)
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import model as M
+from repro.roofline import analysis as R
+from repro.roofline import traffic as T
+
+CELL = {c.name: c for c in SHAPES}
+
+
+def measure(tag: str, cfg, cell, *, fsdp: bool) -> dict:
+    mesh = make_production_mesh()
+    t0 = time.time()
+    c1 = _module_cost(reduced_cfg(cfg, 1, cell), cell, mesh, fsdp)
+    c2 = _module_cost(reduced_cfg(cfg, 2, cell), cell, mesh, fsdp)
+    units = unit_count(cfg)
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        out[k] = c1[k] + (c2[k] - c1[k]) * (units - 1)
+    moment_bytes = 2 if cfg.param_dtype == jnp.bfloat16 else 4
+    fused = T.analytic_memory_bytes(
+        cfg, cell, mesh_axis_sizes(mesh), fsdp=fsdp, moment_bytes=moment_bytes
+    )
+    total, active = M.param_counts(cfg)
+    mf = R.model_flops(cfg, cell, total, active)
+    compute_s = out["flops"] / R.PEAK_FLOPS
+    memory_s = fused / R.HBM_BW
+    coll_s = out["coll_bytes"] / R.ICI_BW
+    step = max(compute_s, memory_s, coll_s)
+    row = {
+        "tag": tag,
+        "arch": cfg.name,
+        "shape": cell.name,
+        "flops_g": out["flops"] / 1e9,
+        "coll_gb": out["coll_bytes"] / 1e9,
+        "mem_gb": fused / 1e9,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "step_s": step,
+        "bottleneck": max(
+            ("compute", "memory", "collective"),
+            key=lambda n: {"compute": compute_s, "memory": memory_s,
+                           "collective": coll_s}[n],
+        ),
+        "useful": (mf / mesh_axis_sizes(mesh)["model"] / 16 / out["flops"])
+        if out["flops"] else 0.0,
+        "model_flops_chip_g": mf / 256 / 1e9,
+        "wall_s": time.time() - t0,
+    }
+    print(
+        f"{tag:42s} c={compute_s:8.4f}s m={memory_s:7.4f}s x={coll_s:8.4f}s "
+        f"step={step:8.4f}s [{row['bottleneck']}]", flush=True,
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="arctic,zamba,llama")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    rows = []
+
+    if "llama" in args.only:
+        cfg = get_config("llama3_8b")
+        cell = CELL["decode_32k"]
+        rows.append(measure("llama3_decode/v1_bf16_weights",
+                            dataclasses.replace(cfg, param_dtype=jnp.bfloat16),
+                            cell, fsdp=False))
+        rows.append(measure(
+            "llama3_decode/v2_bf16_weights+fp8_cache",
+            dataclasses.replace(cfg, param_dtype=jnp.bfloat16,
+                                cache_dtype=jnp.float8_e4m3fn),
+            cell, fsdp=False))
+        cellt = CELL["train_4k"]
+        rows.append(measure("llama3_train/v1_ce_shard_fix", cfg, cellt,
+                            fsdp=_use_fsdp(cfg)))
+
+    if "zamba" in args.only:
+        cfg = get_config("zamba2_7b")
+        cell = CELL["train_4k"]
+        rows.append(measure(
+            "zamba2_train/v1_ce_fix_only",
+            dataclasses.replace(cfg, ssm_shard_constraints=False),
+            cell, fsdp=_use_fsdp(cfg)))
+        rows.append(measure("zamba2_train/v2_ce+ssm_constraints", cfg, cell,
+                            fsdp=_use_fsdp(cfg)))
+
+    if "arctic" in args.only:
+        cfg = get_config("arctic_480b")
+        cell = CELL["train_4k"]
+        rows.append(measure("arctic_train/v1_ce_fix_einsum_dispatch", cfg,
+                            cell, fsdp=True))
+        cfg2 = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="sort"))
+        rows.append(measure("arctic_train/v2_sort_dispatch", cfg2, cell,
+                            fsdp=True))
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    f = out / "hillclimb.json"
+    prev = json.loads(f.read_text()) if f.exists() else []
+    f.write_text(json.dumps(prev + rows, indent=1))
+    print(f"wrote {len(rows)} rows -> {f}")
+
+
+if __name__ == "__main__":
+    main()
+
+
+def extra_round() -> None:
+    """Iteration round 2: remat policy (save matmul outputs -> backward skips
+    recomputed matmuls and their TP collectives)."""
+    rows = []
+    cfg = get_config("arctic_480b")
+    rows.append(measure(
+        "arctic_train/v3_remat_dots",
+        dataclasses.replace(cfg, remat_policy="dots"),
+        CELL["train_4k"], fsdp=True))
+    zcfg = get_config("zamba2_7b")
+    rows.append(measure(
+        "zamba2_train/v3_remat_dots",
+        dataclasses.replace(zcfg, remat_policy="dots"),
+        CELL["train_4k"], fsdp=_use_fsdp(zcfg)))
+    out = Path("experiments/perf")
+    f = out / "hillclimb.json"
+    prev = json.loads(f.read_text()) if f.exists() else []
+    f.write_text(json.dumps(prev + rows, indent=1))
+    print("extra_round done")
+
+
+def arctic_round3() -> None:
+    """Iteration round 3 (arctic): pin MoE dispatch one-hots group-sharded."""
+    rows = []
+    cfg = get_config("arctic_480b")
+    rows.append(measure(
+        "arctic_train/v4_dispatch_constraints+remat_dots",
+        dataclasses.replace(cfg, remat_policy="dots"),
+        CELL["train_4k"], fsdp=True))
+    f = Path("experiments/perf") / "hillclimb.json"
+    prev = json.loads(f.read_text()) if f.exists() else []
+    f.write_text(json.dumps(prev + rows, indent=1))
+    print("arctic_round3 done")

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices.
+
+Mesh layout:
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+The "pod" axis carries only data parallelism (gradient reduction over DCN);
+per-layer tensor/expert collectives stay on "model" inside a pod (ICI).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (CPU tests / local runs)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,263 @@
+"""Autoregressive decode: per-family KV/state caches + one-token step.
+
+Cache shapes (leading L = stacked layer axis, scanned):
+
+  attention (dense/moe/vlm): k,v     [L, B, T, KV, D]      bf16
+  mla (deepseek)           : latent  [L, B, T, r+rope]     bf16 (absorbed)
+  ssm (mamba2)             : state   [L, B, H, P, N] fp32; conv [L, B, w, C]
+  hybrid (zamba2)          : groups' ssm states [G, P_g, ...] + shared-attn
+                             kv per group application [G, B, Tw, KV, D]
+
+T = min(seq_len, attn_window) — sliding-window archs keep a ring buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.model import (
+    FRAME_DIM,
+    PATCH_DIM,
+    _unembed_table,
+    hybrid_layout,
+)
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.attn_window) if cfg.attn_window else seq_len
+
+
+def _ssm_state_shapes(cfg: ModelConfig, batch: int):
+    d_inner, nheads, conv_dim = SSM._dims(cfg)
+    s = cfg.ssm
+    return (
+        (batch, nheads, s.headdim, s.d_state),
+        (batch, s.d_conv - 1, conv_dim),
+    )
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract cache (ShapeDtypeStructs) for (arch, batch, context).
+
+    KV/latent/conv caches use ``cfg.cache_dtype`` (fp8 supported); the SSM
+    recurrent state stays fp32 (accumulated across the whole sequence).
+    """
+    t = cache_len(cfg, seq_len)
+    cdt = cfg.cache_dtype or cfg.compute_dtype
+    hd = cfg.head_dim_eff
+    sds = jax.ShapeDtypeStruct
+
+    if cfg.family == "ssm":
+        st, cv = _ssm_state_shapes(cfg, batch)
+        nl = cfg.num_layers
+        return {"state": sds((nl,) + st, jnp.float32), "conv": sds((nl,) + cv, cdt)}
+    if cfg.family == "hybrid":
+        groups, per, tail = hybrid_layout(cfg)
+        st, cv = _ssm_state_shapes(cfg, batch)
+        out = {
+            "g_state": sds((groups, per) + st, jnp.float32),
+            "g_conv": sds((groups, per) + cv, cdt),
+            "attn_k": sds((groups, batch, t, cfg.num_kv_heads, hd), cdt),
+            "attn_v": sds((groups, batch, t, cfg.num_kv_heads, hd), cdt),
+        }
+        if tail:
+            out["t_state"] = sds((tail,) + st, jnp.float32)
+            out["t_conv"] = sds((tail,) + cv, cdt)
+        return out
+    if cfg.mla:
+        m = cfg.mla
+        width = m.kv_lora_rank + m.qk_rope_head_dim
+        nd = cfg.moe.first_k_dense if cfg.moe else 0
+        out = {"latent": sds((cfg.num_layers - nd, batch, t, width), cdt)}
+        if nd:
+            out["dense_latent"] = sds((nd, batch, t, width), cdt)
+        return out
+    nd = cfg.moe.first_k_dense if cfg.moe else 0
+    out = {
+        "k": sds((cfg.num_layers - nd, batch, t, cfg.num_kv_heads, hd), cdt),
+        "v": sds((cfg.num_layers - nd, batch, t, cfg.num_kv_heads, hd), cdt),
+    }
+    if nd:
+        out["dense_k"] = sds((nd, batch, t, cfg.num_kv_heads, hd), cdt)
+        out["dense_v"] = sds((nd, batch, t, cfg.num_kv_heads, hd), cdt)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, seq_len))
+
+
+# --------------------------------------------------------------------------
+# per-block decode bodies
+# --------------------------------------------------------------------------
+
+def _attn_block_decode(bp, x, ck, cv, pos, cfg: ModelConfig):
+    a, nck, ncv = L.attention_decode(
+        bp["attn"], L.rmsnorm_apply(bp["ln1"], x), ck, cv, pos, cfg
+    )
+    x = x + a
+    h = L.rmsnorm_apply(bp["ln2"], x)
+    if "router" in bp["ffn"]:
+        y, _ = MOE.moe_apply(bp["ffn"], h, cfg)
+    else:
+        y = L.mlp_apply(bp["ffn"], h, cfg)
+    return x + y, nck, ncv
+
+
+def _mla_block_decode(bp, x, latent, pos, cfg: ModelConfig):
+    a, nlat = MLA.mla_decode(bp["attn"], L.rmsnorm_apply(bp["ln1"], x), latent, pos, cfg)
+    x = x + a
+    h = L.rmsnorm_apply(bp["ln2"], x)
+    if "router" in bp["ffn"]:
+        y, _ = MOE.moe_apply(bp["ffn"], h, cfg)
+    else:
+        y = L.mlp_apply(bp["ffn"], h, cfg)
+    return x + y, nlat
+
+
+def _ssm_block_decode(bp, x, state, conv, cfg: ModelConfig):
+    y, ns, nc = SSM.ssm_decode(bp["ssm"], L.rmsnorm_apply(bp["ln"], x), state, conv, cfg)
+    return x + y, ns, nc
+
+
+# --------------------------------------------------------------------------
+# decode step
+# --------------------------------------------------------------------------
+
+def _scan(cfg: ModelConfig, f, carry, xs):
+    """lax.scan or an unrolled python loop (exact cost_analysis accounting
+    for the dry-run), matching scan's (carry, stacked_ys) contract."""
+    if cfg.scan_layers:
+        return jax.lax.scan(f, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def decode_step(params, cache: dict, batch: dict, cfg: ModelConfig):
+    """One-token step: batch = {"tokens": [B,1] int32, "pos": [] int32}.
+
+    Returns (logits [B, V_pad], new_cache).
+    """
+    pos = batch["pos"]
+    x = L.embed_apply(params["embed"], batch["tokens"], cfg)
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        def step(carry, xs):
+            bp, st, cv = xs
+            y, ns, nc = _ssm_block_decode(bp, carry, st, cv, cfg)
+            return y, (ns, nc)
+
+        x, (ns, nc) = _scan(cfg, step, x, (params["blocks"], cache["state"], cache["conv"]))
+        new_cache = {"state": ns, "conv": nc}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(carry, xs):
+            bp, st, cv = xs
+            y, ns, nc = _ssm_block_decode(bp, carry, st, cv, cfg)
+            return y, (ns, nc)
+
+        def group(carry, xs):
+            gp, gst, gcv, ck, cv = xs
+            h, (ns, nc) = _scan(cfg, inner, carry, (gp, gst, gcv))
+            h, nck, ncv = _attn_block_decode(shared, h, ck, cv, pos, cfg)
+            return h, (ns, nc, nck, ncv)
+
+        x, (gs_, gc_, ak, av) = _scan(
+            cfg, group, x,
+            (params["groups"], cache["g_state"], cache["g_conv"],
+             cache["attn_k"], cache["attn_v"]),
+        )
+        new_cache = {"g_state": gs_, "g_conv": gc_, "attn_k": ak, "attn_v": av}
+        if "tail" in params:
+            x, (ts, tc) = _scan(cfg,
+                inner, x, (params["tail"], cache["t_state"], cache["t_conv"])
+            )
+            new_cache["t_state"] = ts
+            new_cache["t_conv"] = tc
+
+    elif cfg.mla:
+        if "dense_blocks" in params:
+            def dstep(carry, xs):
+                bp, lat = xs
+                y, nlat = _mla_block_decode(bp, carry, lat, pos, cfg)
+                return y, nlat
+            x, dlat = _scan(cfg, dstep, x, (params["dense_blocks"], cache["dense_latent"]))
+            new_cache["dense_latent"] = dlat
+
+        def step(carry, xs):
+            bp, lat = xs
+            y, nlat = _mla_block_decode(bp, carry, lat, pos, cfg)
+            return y, nlat
+
+        x, lat = _scan(cfg, step, x, (params["blocks"], cache["latent"]))
+        new_cache["latent"] = lat
+
+    else:
+        if "dense_blocks" in params:
+            def dstep(carry, xs):
+                bp, ck, cv = xs
+                y, nck, ncv = _attn_block_decode(bp, carry, ck, cv, pos, cfg)
+                return y, (nck, ncv)
+            x, (dk, dv) = jax.lax.scan(
+                dstep, x, (params["dense_blocks"], cache["dense_k"], cache["dense_v"])
+            )
+            new_cache["dense_k"] = dk
+            new_cache["dense_v"] = dv
+
+        def step(carry, xs):
+            bp, ck, cv = xs
+            y, nck, ncv = _attn_block_decode(bp, carry, ck, cv, pos, cfg)
+            return y, (nck, ncv)
+
+        x, (nk, nv) = _scan(cfg, step, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache["k"] = nk
+        new_cache["v"] = nv
+
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    logits = L.unembed_logits(_unembed_table(params, cfg), x[:, -1], cfg)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract model inputs for one shape cell (no device allocation)."""
+    sds = jax.ShapeDtypeStruct
+    b, s = cell.global_batch, cell.seq_len
+    cdt = cfg.compute_dtype
+
+    if cell.kind in ("train", "prefill"):
+        if cfg.frontend == "frames":
+            out = {"frames": sds((b, s, FRAME_DIM), cdt)}
+        elif cfg.frontend == "patch":
+            n_img = cfg.frontend_tokens
+            out = {
+                "patches": sds((b, n_img, PATCH_DIM), cdt),
+                "tokens": sds((b, s - n_img), jnp.int32),
+            }
+        else:
+            out = {"tokens": sds((b, s), jnp.int32)}
+        if cell.kind == "train":
+            out["labels"] = sds((b, s), jnp.int32)
+        return out
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((b, 1), jnp.int32), "pos": sds((), jnp.int32)}

@@ -1,0 +1,344 @@
+"""Core transformer building blocks as (schema, apply) function pairs.
+
+Every module exposes ``<name>_schema(cfg, ...) -> Schema`` and a pure
+``<name>_apply(params, ...)``; params are plain nested dicts so they stack
+cleanly for scan-over-layers and shard via ``schema.param_pspecs``.
+
+Logical axes used here:
+  embed (d_model) · heads · kv_heads · head_dim · mlp (d_ff) · vocab · layers
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamDef, Schema
+
+# --------------------------------------------------------------------------
+# activation sharding constraints
+# --------------------------------------------------------------------------
+
+def constrain(x: jax.Array, *axes: "str | None") -> jax.Array:
+    """with_sharding_constraint against the ambient mesh, by convention:
+    'batch' -> ('pod','data') (whichever exist), 'model' -> model axis.
+    No-op outside a mesh context (eager smoke tests)."""
+    names: tuple = ()
+    try:  # new-style explicit mesh context
+        am = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(am, "axis_names", ()) or ())
+    except Exception:
+        pass
+    if not names:
+        try:  # classic `with mesh:` resource env
+            from jax._src.mesh import thread_resources
+
+            pm = thread_resources.env.physical_mesh
+            if not pm.empty:
+                names = tuple(pm.axis_names)
+        except Exception:
+            return x
+    if not names:
+        return x
+    resolved = []
+    for a in axes:
+        if a == "batch":
+            ba = tuple(n for n in ("pod", "data") if n in names)
+            resolved.append(ba if ba else None)
+        elif a == "model":
+            resolved.append("model" if "model" in names else None)
+        else:
+            resolved.append(None)
+    from jax.sharding import PartitionSpec as _P
+
+    return jax.lax.with_sharding_constraint(x, _P(*resolved))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_schema(dim: int) -> Schema:
+    return {"scale": ParamDef((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm_apply(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embeddings + chunked cross-entropy
+# --------------------------------------------------------------------------
+
+def embed_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "table": ParamDef(
+            (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+            dtype=cfg.param_dtype, init="embed",
+        )
+    }
+
+
+def embed_apply(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["table"].astype(cfg.compute_dtype)[tokens]
+
+
+def unembed_logits(table: jax.Array, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """h: [..., d] -> logits [..., V_pad] (bf16 matmul, fp32 accum)."""
+    return jnp.einsum(
+        "...d,vd->...v",
+        h.astype(cfg.compute_dtype),
+        table.astype(cfg.compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def chunked_ce_loss(
+    table: jax.Array,
+    hidden: jax.Array,
+    labels: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk's logits are recomputed in the
+    backward pass (jax.checkpoint), so peak memory is one [B, chunk, V]
+    buffer instead of the full logits tensor — the difference between
+    fitting gemma-7b's 256k vocab at seq 4096 and not.
+    """
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    n = s // chunk
+    assert s % chunk == 0, f"seq {s} % loss_chunk {chunk} != 0"
+    hidden = constrain(hidden, "batch", None, None)
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    vmask_len = cfg.padded_vocab
+
+    @jax.checkpoint
+    def one_chunk(h, lab):
+        h = constrain(h, "batch", None, None)
+        logits = unembed_logits(table, h, cfg)  # [b, chunk, Vp] fp32
+        # keep batch sharded and vocab model-sharded through the CE math —
+        # without this XLA has been observed to all-gather the batch here,
+        # replicating [B_global, S, V/16] logits on every chip
+        logits = constrain(logits, "batch", None, "model")
+        # mask padded vocab entries out of the partition function
+        pad = jnp.arange(vmask_len) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        w = (lab >= 0).astype(jnp.float32)  # negative labels = ignore (VLM)
+        safe = jnp.maximum(lab, 0)
+        # one-hot contraction instead of take_along_axis: partitions cleanly
+        # over the vocab-sharded axis (psum) instead of a cross-shard gather
+        oh = jax.nn.one_hot(safe, vmask_len, dtype=logits.dtype)
+        gold = jnp.einsum("btv,btv->bt", logits, oh)
+        return jnp.sum(w * (lse - gold)), jnp.sum(w)
+
+    def body(acc, xs):
+        h, lab = xs
+        loss, cnt = one_chunk(h, lab)
+        return (acc[0] + loss, acc[1] + cnt), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc)
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU or plain)
+# --------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None) -> Schema:
+    d_ff = d_ff or cfg.d_ff
+    pdt = cfg.param_dtype
+    sch: Schema = {
+        "w_up": ParamDef((cfg.d_model, d_ff), ("embed", "mlp"), dtype=pdt),
+        "w_down": ParamDef((d_ff, cfg.d_model), ("mlp", "embed"), dtype=pdt),
+    }
+    if cfg.gated_mlp:
+        sch["w_gate"] = ParamDef((cfg.d_model, d_ff), ("embed", "mlp"), dtype=pdt)
+    return sch
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cdt = cfg.compute_dtype
+    xc = x.astype(cdt)
+    up = jnp.einsum("...d,df->...f", xc, params["w_up"].astype(cdt))
+    if cfg.gated_mlp:
+        gate = jnp.einsum("...d,df->...f", xc, params["w_gate"].astype(cdt))
+        h = _act(gate, cfg.mlp_act) * up
+    else:
+        h = _act(up, cfg.mlp_act)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(cdt))
+
+
+# --------------------------------------------------------------------------
+# GQA attention (full / sliding-window / bidirectional; prefill + decode)
+# --------------------------------------------------------------------------
+
+def attention_schema(cfg: ModelConfig) -> Schema:
+    hd = cfg.head_dim_eff
+    pdt = cfg.param_dtype
+    sch: Schema = {
+        "wq": ParamDef((cfg.d_model, cfg.num_heads, hd), ("embed", "heads", "head_dim"), dtype=pdt),
+        "wk": ParamDef((cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype=pdt),
+        "wv": ParamDef((cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype=pdt),
+        "wo": ParamDef((cfg.num_heads, hd, cfg.d_model), ("heads", "head_dim", "embed"), dtype=pdt),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = ParamDef((cfg.num_heads, hd), ("heads", "head_dim"), init="zeros", dtype=pdt)
+        sch["bk"] = ParamDef((cfg.num_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros", dtype=pdt)
+        sch["bv"] = ParamDef((cfg.num_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros", dtype=pdt)
+    return sch
+
+
+def _qkv(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    cdt = cfg.compute_dtype
+    xc = x.astype(cdt)
+    q = jnp.einsum("...sd,dhk->...shk", xc, params["wq"].astype(cdt))
+    k = jnp.einsum("...sd,dhk->...shk", xc, params["wk"].astype(cdt))
+    v = jnp.einsum("...sd,dhk->...shk", xc, params["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+    if cfg.use_rope:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(
+    q: jax.Array,        # [B, Sq, H, D]
+    k: jax.Array,        # [B, Skv, K, D]
+    v: jax.Array,        # [B, Skv, K, D]
+    *,
+    causal: bool,
+    q_positions: jax.Array,   # [Sq] absolute positions of queries
+    kv_positions: jax.Array,  # [Skv]
+    window: int = 0,
+    kv_len: Optional[jax.Array] = None,  # mask kv positions >= kv_len (decode)
+) -> jax.Array:
+    """Grouped-query attention core with fp32 softmax."""
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, d)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    qpos = q_positions[:, None]   # [Sq, 1]
+    kpos = kv_positions[None, :]  # [1, Skv]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def attention_apply(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+) -> jax.Array:
+    """Full-sequence (train/prefill) attention."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    out = gqa_attend(
+        q, k, v,
+        causal=cfg.causal,
+        q_positions=positions,
+        kv_positions=positions,
+        window=cfg.attn_window,
+    )
+    return jnp.einsum("...shk,hkd->...sd", out, params["wo"].astype(cfg.compute_dtype))
+
+
+def attention_decode(
+    params,
+    x: jax.Array,            # [B, 1, d]
+    cache_k: jax.Array,      # [B, T, K, D]
+    cache_v: jax.Array,
+    pos: jax.Array,          # [] current position (tokens so far)
+    cfg: ModelConfig,
+):
+    """One-token decode against a KV cache; returns (y, new_k, new_v).
+
+    With a sliding window the cache is a ring buffer of size ``window`` and
+    slot = pos % window; otherwise slot = pos.
+    """
+    t = cache_k.shape[1]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)
+    slot = jnp.where(cfg.attn_window > 0, pos % t, pos).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    if cfg.attn_window > 0:
+        # ring buffer: absolute position of each slot given current pos.
+        # Slots beyond pos%t hold the *previous* cycle (base - t + idx);
+        # slots never written yet get a sentinel past `pos` so the causal
+        # mask excludes them.
+        idx = jnp.arange(t)
+        cur = pos % t
+        base = pos - cur
+        abs_pos = jnp.where(idx <= cur, base + idx, base - t + idx)
+        kv_positions = jnp.where(abs_pos >= 0, abs_pos, jnp.int32(2**30)).astype(jnp.int32)
+        out = gqa_attend(
+            q, ck.astype(q.dtype), cv.astype(q.dtype),
+            causal=True, q_positions=positions, kv_positions=kv_positions,
+            window=cfg.attn_window,
+        )
+    else:
+        kv_positions = jnp.arange(t, dtype=jnp.int32)
+        out = gqa_attend(
+            q, ck.astype(q.dtype), cv.astype(q.dtype),
+            causal=True, q_positions=positions, kv_positions=kv_positions,
+            kv_len=pos + 1,
+        )
+    y = jnp.einsum("...shk,hkd->...sd", out, params["wo"].astype(cfg.compute_dtype))
+    return y, ck, cv

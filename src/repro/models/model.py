@@ -1,0 +1,272 @@
+"""Model assembly: schema + forward/loss/prefill/decode for every family.
+
+One generic stack covers all 10 assigned architectures:
+
+  dense   — pre-norm GQA attention + (SwiGLU|GeGLU) MLP, scanned over layers
+  moe     — attention + MoE FFN (optional leading dense layers, shared
+            experts, parallel dense branch)
+  mla     — DeepSeek MLA attention replaces GQA
+  ssm     — Mamba2 SSD blocks, attention-free
+  hybrid  — Zamba2: groups of SSD blocks + one *shared-weight* attention
+            block applied after each group
+  audio   — HuBERT-style encoder-only (bidirectional, frame-embedding stub)
+  vlm     — LLaVA-style: projected patch embeddings prepended to the token
+            stream, causal LM on top
+
+Layers are stacked with a leading "layers" axis and executed with
+``jax.lax.scan`` (O(1) HLO size at any depth) under an optional
+``jax.checkpoint`` remat policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.schema import ParamDef, Schema, map_schema
+
+PATCH_DIM = 1024   # vision-tower stub output dim (CLIP-L/14-like)
+FRAME_DIM = 512    # audio conv-frontend stub output dim
+
+
+# --------------------------------------------------------------------------
+# schema
+# --------------------------------------------------------------------------
+
+def stack_schema(n: int, sch: Schema) -> Schema:
+    return map_schema(
+        sch, lambda pd: ParamDef((n,) + pd.shape, ("layers",) + pd.axes,
+                                 dtype=pd.dtype, init=pd.init,
+                                 fan_axis=pd.fan_axis + 1),
+    )
+
+
+def _attn_block_schema(cfg: ModelConfig) -> Schema:
+    attn = MLA.mla_schema(cfg) if cfg.mla else L.attention_schema(cfg)
+    sch: Schema = {"ln1": L.rmsnorm_schema(cfg.d_model), "attn": attn,
+                   "ln2": L.rmsnorm_schema(cfg.d_model)}
+    if cfg.moe:
+        sch["ffn"] = MOE.moe_schema(cfg)
+    else:
+        sch["ffn"] = L.mlp_schema(cfg)
+    return sch
+
+
+def _dense_block_schema(cfg: ModelConfig) -> Schema:
+    """Plain dense block (used for DeepSeek's leading non-MoE layers)."""
+    attn = MLA.mla_schema(cfg) if cfg.mla else L.attention_schema(cfg)
+    return {"ln1": L.rmsnorm_schema(cfg.d_model), "attn": attn,
+            "ln2": L.rmsnorm_schema(cfg.d_model),
+            "ffn": L.mlp_schema(cfg, d_ff=cfg.d_ff or cfg.moe.expert_d_ff)}
+
+
+def _ssm_block_schema(cfg: ModelConfig) -> Schema:
+    return {"ln": L.rmsnorm_schema(cfg.d_model), "ssm": SSM.ssm_schema(cfg)}
+
+
+def hybrid_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(num_groups, layers_per_group, tail) for hybrid archs."""
+    per = cfg.attn_every
+    groups = cfg.num_layers // per
+    tail = cfg.num_layers - groups * per
+    return groups, per, tail
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    sch: Schema = {"embed": L.embed_schema(cfg),
+                   "final_norm": L.rmsnorm_schema(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = {
+            "table": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                              dtype=cfg.param_dtype, init="embed")
+        }
+    if cfg.frontend == "patch":
+        sch["frontend_proj"] = {
+            "w": ParamDef((PATCH_DIM, cfg.d_model), (None, "embed"), dtype=cfg.param_dtype)
+        }
+    elif cfg.frontend == "frames":
+        sch["frontend_proj"] = {
+            "w": ParamDef((FRAME_DIM, cfg.d_model), (None, "embed"), dtype=cfg.param_dtype)
+        }
+
+    if cfg.family == "ssm":
+        sch["blocks"] = stack_schema(cfg.num_layers, _ssm_block_schema(cfg))
+    elif cfg.family == "hybrid":
+        groups, per, tail = hybrid_layout(cfg)
+        sch["groups"] = stack_schema(groups, stack_schema(per, _ssm_block_schema(cfg)))
+        if tail:
+            sch["tail"] = stack_schema(tail, _ssm_block_schema(cfg))
+        sch["shared_attn"] = {"ln1": L.rmsnorm_schema(cfg.d_model),
+                              "attn": L.attention_schema(cfg),
+                              "ln2": L.rmsnorm_schema(cfg.d_model),
+                              "ffn": L.mlp_schema(cfg)}
+    else:
+        n_moe_first_dense = cfg.moe.first_k_dense if cfg.moe else 0
+        if n_moe_first_dense:
+            sch["dense_blocks"] = stack_schema(n_moe_first_dense, _dense_block_schema(cfg))
+        sch["blocks"] = stack_schema(
+            cfg.num_layers - n_moe_first_dense, _attn_block_schema(cfg)
+        )
+    return sch
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# --------------------------------------------------------------------------
+
+def _attn_block_apply(bp, x, cfg: ModelConfig, positions):
+    x = L.constrain(x, "batch", None, None)
+    if cfg.mla:
+        a = MLA.mla_apply(bp["attn"], L.rmsnorm_apply(bp["ln1"], x), cfg, positions)
+    else:
+        a = L.attention_apply(bp["attn"], L.rmsnorm_apply(bp["ln1"], x), cfg, positions)
+    x = x + a
+    h = L.rmsnorm_apply(bp["ln2"], x)
+    if "router" in bp["ffn"]:  # MoE
+        y, aux = MOE.moe_apply(bp["ffn"], h, cfg)
+    else:
+        y, aux = L.mlp_apply(bp["ffn"], h, cfg), jnp.zeros((), jnp.float32)
+    return L.constrain(x + y, "batch", None, None), aux
+
+
+def _dense_block_apply(bp, x, cfg: ModelConfig, positions):
+    if cfg.mla:
+        a = MLA.mla_apply(bp["attn"], L.rmsnorm_apply(bp["ln1"], x), cfg, positions)
+    else:
+        a = L.attention_apply(bp["attn"], L.rmsnorm_apply(bp["ln1"], x), cfg, positions)
+    x = x + a
+    return x + L.mlp_apply(bp["ffn"], L.rmsnorm_apply(bp["ln2"], x), cfg)
+
+
+def _ssm_block_apply(bp, x, cfg: ModelConfig):
+    x = L.constrain(x, "batch", None, None)
+    return x + SSM.ssm_apply(bp["ssm"], L.rmsnorm_apply(bp["ln"], x), cfg)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(blocks, x, body_fn, cfg: ModelConfig):
+    body = _maybe_remat(body_fn, cfg)
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            bp = jax.tree.map(lambda a: a[i], blocks)
+            x, a = body(bp, x)
+            aux = aux + a
+        return x, aux
+
+    def step(carry, bp):
+        x, aux = carry
+        x2, a = body(bp, x)
+        return (x2, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Token / frame / patch embedding per family -> [B, S, d]."""
+    if cfg.frontend == "frames":
+        return jnp.einsum(
+            "bsf,fd->bsd",
+            batch["frames"].astype(cfg.compute_dtype),
+            params["frontend_proj"]["w"].astype(cfg.compute_dtype),
+        )
+    tok = L.embed_apply(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "patch":
+        img = jnp.einsum(
+            "bsf,fd->bsd",
+            batch["patches"].astype(cfg.compute_dtype),
+            params["frontend_proj"]["w"].astype(cfg.compute_dtype),
+        )
+        tok = jnp.concatenate([img, tok], axis=1)
+    return tok
+
+
+def forward(params, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Returns (hidden [B,S,d], moe_aux_loss)."""
+    x = embed_inputs(params, batch, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        x, aux = _scan_blocks(
+            params["blocks"], x, lambda bp, h: (_ssm_block_apply(bp, h, cfg), 0.0), cfg
+        )
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(bp, h):
+            h, _ = _scan_blocks(
+                bp, h, lambda b2, hh: (_ssm_block_apply(b2, hh, cfg), 0.0), cfg
+            )
+            h = _dense_block_apply(shared, h, cfg, positions)
+            return h, 0.0
+
+        x, _ = _scan_blocks(params["groups"], x, group_body, cfg)
+        if "tail" in params:
+            x, _ = _scan_blocks(
+                params["tail"], x,
+                lambda bp, h: (_ssm_block_apply(bp, h, cfg), 0.0), cfg,
+            )
+    else:
+        if "dense_blocks" in params:
+            x, _ = _scan_blocks(
+                params["dense_blocks"], x,
+                lambda bp, h: (_dense_block_apply(bp, h, cfg, positions), 0.0), cfg,
+            )
+        x, aux = _scan_blocks(
+            params["blocks"], x,
+            lambda bp, h: _attn_block_apply(bp, h, cfg, positions), cfg,
+        )
+    return L.rmsnorm_apply(params["final_norm"], x), aux
+
+
+def _unembed_table(params, cfg: ModelConfig) -> jax.Array:
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["lm_head"]["table"])
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    hidden, aux = forward(params, batch, cfg)
+    table = _unembed_table(params, cfg)
+    labels = batch["labels"]
+    ce = L.chunked_ce_loss(table, hidden, labels, cfg)
+    return ce + aux
+
+
+def logits_last(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Prefill-style forward returning last-position logits [B, V]."""
+    hidden, _ = forward(params, batch, cfg)
+    return L.unembed_logits(_unembed_table(params, cfg), hidden[:, -1], cfg)
+
+
+def param_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts; active excludes unrouted experts."""
+    from repro.models.schema import param_count
+
+    total = param_count(model_schema(cfg))
+    active = total
+    if cfg.moe:
+        n_moe = cfg.num_layers - cfg.moe.first_k_dense
+        per_expert = 3 * cfg.d_model * cfg.moe.expert_d_ff
+        active -= n_moe * (cfg.moe.num_experts - cfg.moe.top_k) * per_expert
+    return total, active

@@ -1,0 +1,213 @@
+"""Mixture-of-Experts layer: GShard-style grouped dense dispatch.
+
+TPU adaptation: routing is expressed as capacity-bounded one-hot dispatch /
+combine einsums so the whole layer is MXU matmuls — no host gathers, no
+ragged ops.  Tokens are split into groups of ``group_size``; capacity is
+per-group (C = ceil(group * top_k * capacity_factor / E)), which shrinks the
+dispatch tensor by the group count versus global capacity while preserving
+the same drop semantics under even routing.
+
+Supports:
+  * top-k routing with renormalized softmax gates,
+  * shared (always-on) experts (DeepSeek-V2),
+  * a parallel dense FFN residual branch (Arctic),
+  * switch-style load-balancing auxiliary loss.
+
+Sharding: expert weights carry the "experts" logical axis -> model mesh
+axis (expert parallelism); dispatch/combine einsums then induce exactly one
+all-to-all-equivalent collective pair per layer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act, mlp_apply, mlp_schema
+from repro.models.schema import ParamDef, Schema
+
+AUX_LOSS_COEF = 0.01
+
+
+def moe_schema(cfg: ModelConfig) -> Schema:
+    m = cfg.moe
+    pdt = cfg.param_dtype
+    e, d, f = m.num_experts, cfg.d_model, m.expert_d_ff
+    sch: Schema = {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32, init="normal:0.02"),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "mlp"), dtype=pdt),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "mlp"), dtype=pdt),
+        "w_down": ParamDef((e, f, d), ("experts", "mlp", "embed"), dtype=pdt),
+    }
+    if m.shared_experts:
+        sch["shared"] = mlp_schema(cfg, d_ff=m.shared_experts * m.expert_d_ff)
+    if m.dense_parallel:
+        sch["dense"] = mlp_schema(cfg, d_ff=cfg.d_ff)
+    return sch
+
+
+def moe_apply(
+    params, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss).  Dispatch per cfg.moe.dispatch."""
+    if cfg.moe.dispatch == "sort":
+        return moe_apply_sorted(params, x, cfg)
+    return _moe_apply_einsum(params, x, cfg)
+
+
+def _moe_apply_einsum(
+    params, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """GShard-style dense one-hot dispatch (baseline).
+
+    FLOP cost carries a tokens*E*C*d dispatch/combine term — prohibitive at
+    large E (arctic: 128 experts makes dispatch ~190x the routed FF math);
+    kept as the reference implementation the sort path is verified against.
+    """
+    m = cfg.moe
+    cdt = cfg.compute_dtype
+    b, s, d = x.shape
+    tokens = b * s
+    gs = min(m.group_size, tokens)
+    assert tokens % gs == 0, f"tokens {tokens} % group_size {gs}"
+    g = tokens // gs
+    e, k = m.num_experts, m.top_k
+    cap = max(1, math.ceil(gs * k * m.capacity_factor / e))
+
+    from repro.models.layers import constrain
+
+    xg = x.reshape(g, gs, d).astype(cdt)
+    logits = jnp.einsum(
+        "gtd,de->gte", xg, params["router"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                   # [g,t,e] fp32
+    gate, idx = jax.lax.top_k(probs, k)                        # [g,t,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # -- capacity assignment over the flattened (token-major, then k) order --
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)         # [g,t,k,e]
+    flat = constrain(onehot.reshape(g, gs * k, e), "batch", None, None)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # slots used before
+    keep = (pos < cap) * flat                                  # [g,t*k,e]
+    slot_oh = jax.nn.one_hot(
+        jnp.minimum(pos, cap - 1).astype(jnp.int32), cap, dtype=jnp.float32
+    )                                                          # [g,t*k,e,cap]
+    # NOTE (§Perf, refuted hypothesis): forcing these one-hots group-sharded
+    # via with_sharding_constraint was measured to WORSEN arctic's collective
+    # term (16.6 -> 19.2 s) — the partitioner's own placement was better.
+    dispatch_flat = keep[..., None] * slot_oh                  # [g,t*k,e,cap]
+    gate_flat = gate.reshape(g, gs * k)
+    combine_flat = dispatch_flat * gate_flat[..., None, None]
+    dispatch = dispatch_flat.reshape(g, gs, k, e, cap).sum(2).astype(cdt)
+    combine = combine_flat.reshape(g, gs, k, e, cap).sum(2).astype(cdt)
+
+    # -- expert computation (gated MLP per expert) ---------------------------
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)            # [g,e,cap,d]
+    hg = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cdt))
+    hu = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cdt))
+    h = _act(hg, cfg.mlp_act) * hu
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(cdt))
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye).reshape(b, s, d)
+
+    # -- auxiliary load-balancing loss (Switch/GShard form) ------------------
+    me = probs.mean(axis=(0, 1))                               # mean router prob
+    ce = onehot.sum(2).mean(axis=(0, 1)) / k                   # dispatch fraction
+    aux = AUX_LOSS_COEF * e * jnp.sum(me * ce)                 # == coef at uniform
+
+    if m.shared_experts:
+        y = y + mlp_apply(params["shared"], x, cfg)
+    if m.dense_parallel:
+        y = y + mlp_apply(params["dense"], x, cfg)
+    return y.astype(x.dtype), aux
+
+
+def moe_apply_sorted(
+    params, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Sort-based dispatch: argsort token-expert assignments, gather tokens
+    into per-expert capacity slots, run the expert FF, scatter-add back.
+
+    Same drop semantics as the einsum path (token-major priority within each
+    group, capacity C per expert per group) — asserted equal in tests — but
+    the dispatch cost becomes O(tokens*k*d) data movement instead of
+    O(tokens*E*C*d) matmul FLOPs.  On TPU the gathers lower to dynamic-slice
+    /DUS traffic and the FF keeps the MXU busy; this is the TPU-idiomatic
+    answer to megablocks-style grouped GEMM.
+    """
+    m = cfg.moe
+    cdt = cfg.compute_dtype
+    b, s, d = x.shape
+    tokens = b * s
+    gs = min(m.group_size, tokens)
+    assert tokens % gs == 0
+    g = tokens // gs
+    e, k = m.num_experts, m.top_k
+    cap = max(1, math.ceil(gs * k * m.capacity_factor / e))
+
+    xg = x.reshape(g, gs, d).astype(cdt)
+    logits = jnp.einsum(
+        "gtd,de->gte", xg, params["router"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                         # [g,t,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # flatten (token-major, then k) to match the einsum path's priority
+    e_flat = idx.reshape(g, gs * k)                             # [g, t*k]
+    # stable sort by expert keeps token order within each expert segment
+    order = jnp.argsort(e_flat, axis=1, stable=True)            # [g, t*k]
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    # position within expert segment: index - start_of_segment
+    ar = jnp.arange(gs * k, dtype=jnp.int32)[None, :]
+    seg_start = jnp.full((g, e), gs * k, jnp.int32).at[
+        jnp.arange(g)[:, None], e_sorted
+    ].min(jnp.broadcast_to(ar, (g, gs * k)), mode="drop")
+    pos = ar - jnp.take_along_axis(seg_start, e_sorted, axis=1)
+    keep = pos < cap
+    slot = jnp.where(keep, e_sorted * cap + pos, e * cap)       # OOB -> dropped
+
+    token_of = order // k                                       # source token
+    # gather tokens into [g, e*cap, d] buffers (+1 dump row for drops)
+    buf_tok = jnp.full((g, e * cap + 1), gs, jnp.int32)         # gs = dummy row
+    buf_tok = buf_tok.at[jnp.arange(g)[:, None], slot].set(
+        jnp.where(keep, token_of, gs), mode="drop"
+    )
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), cdt)], axis=1)
+    xe = jnp.take_along_axis(
+        xg_pad, buf_tok[..., None], axis=1
+    )[:, : e * cap].reshape(g, e, cap, d)
+
+    hg = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cdt))
+    hu = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cdt))
+    ye = jnp.einsum(
+        "gecf,efd->gecd", _act(hg, cfg.mlp_act) * hu, params["w_down"].astype(cdt)
+    ).reshape(g, e * cap, d)
+
+    # combine: gather each kept assignment's expert output, gate, scatter-add
+    gate_flat = jnp.take_along_axis(gate.reshape(g, gs * k), order, axis=1)
+    w_slot = jnp.where(keep, gate_flat, 0.0).astype(cdt)       # [g, t*k]
+    vals = jnp.take_along_axis(
+        ye, jnp.minimum(slot, e * cap - 1)[..., None], axis=1
+    ) * w_slot[..., None]                                      # [g, t*k, d]
+    tgt = jnp.where(keep, token_of, gs)                        # gs = dump row
+    y = jnp.zeros((g, gs + 1, d), cdt).at[
+        jnp.arange(g)[:, None], tgt
+    ].add(vals, mode="drop")[:, :gs]
+    y = y.reshape(b, s, d)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+    me = probs.mean(axis=(0, 1))
+    ce_frac = onehot.sum(2).mean(axis=(0, 1)) / k
+    aux = AUX_LOSS_COEF * e * jnp.sum(me * ce_frac)
+
+    if m.shared_experts:
+        y = y + mlp_apply(params["shared"], x, cfg)
+    if m.dense_parallel:
+        y = y + mlp_apply(params["dense"], x, cfg)
+    return y.astype(x.dtype), aux

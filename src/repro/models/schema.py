@@ -1,0 +1,147 @@
+"""Schema-driven parameters: one definition yields real init, abstract
+shapes (for the dry-run), and PartitionSpecs (for pjit).
+
+Every model module describes its parameters as a nested dict of ``ParamDef``
+leaves carrying a shape, a tuple of *logical axis names*, and an initializer.
+The three consumers:
+
+  * ``init_params(schema, key)``        -> pytree of concrete arrays
+  * ``abstract_params(schema)``         -> pytree of ShapeDtypeStruct
+  * ``param_pspecs(schema, rules, mesh)``-> pytree of PartitionSpec
+
+Logical -> mesh axis resolution applies a divisibility guard: if a dimension
+does not divide evenly over the requested mesh axis it falls back to
+replication (e.g. arctic's 56 heads on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # fan_in | zeros | ones | normal:<std> | embed
+    fan_axis: int = 0     # which dim is fan-in for fan_in init
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+Schema = dict  # nested dict[str, ParamDef | Schema]
+
+
+def _leaf_paths(schema: Schema, prefix: tuple = ()):  # depth-first, ordered
+    for k in sorted(schema):
+        v = schema[k]
+        if isinstance(v, ParamDef):
+            yield prefix + (k,), v
+        else:
+            yield from _leaf_paths(v, prefix + (k,))
+
+
+def map_schema(schema: Schema, fn: Callable[[ParamDef], Any]) -> dict:
+    out: dict = {}
+    for k, v in schema.items():
+        out[k] = fn(v) if isinstance(v, ParamDef) else map_schema(v, fn)
+    return out
+
+
+def _init_leaf(pd: ParamDef, key: jax.Array) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, pd.dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, pd.dtype)
+    if pd.init.startswith("normal:"):
+        std = float(pd.init.split(":", 1)[1])
+        return (jax.random.normal(key, pd.shape) * std).astype(pd.dtype)
+    if pd.init == "embed":
+        return (jax.random.normal(key, pd.shape) * 0.02).astype(pd.dtype)
+    # fan_in (truncated-normal-ish scaled); fan over fan_axis, excluding any
+    # leading stacking ("layers"/"experts") axes which are part of the batch
+    fan = pd.shape[pd.fan_axis] if pd.shape else 1
+    std = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, pd.shape) * std).astype(pd.dtype)
+
+
+def init_params(schema: Schema, key: jax.Array) -> dict:
+    leaves = list(_leaf_paths(schema))
+    keys = jax.random.split(key, max(1, len(leaves)))
+    flat = {path: _init_leaf(pd, k) for (path, pd), k in zip(leaves, keys)}
+    out: dict = {}
+    for path, arr in flat.items():
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = arr
+    return out
+
+
+def abstract_params(schema: Schema) -> dict:
+    return map_schema(schema, lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype))
+
+
+@dataclass
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping with divisibility fallback.
+
+    ``rules`` values may be a mesh axis name, a tuple of mesh axes, or None.
+    """
+
+    rules: dict[str, Any]
+    mesh_axis_sizes: dict[str, int]
+
+    def resolve(self, dim: int, axis: Optional[str]):
+        if axis is None:
+            return None
+        target = self.rules.get(axis)
+        if target is None:
+            return None
+        axes = target if isinstance(target, tuple) else (target,)
+        total = 1
+        for a in axes:
+            total *= self.mesh_axis_sizes[a]
+        if dim % total != 0:
+            return None  # fall back to replication (e.g. 56 heads / 16-way)
+        return target
+
+    def spec_for(self, pd: ParamDef) -> P:
+        """Resolve each dim; a mesh axis may appear only once per spec, so
+        later dims fall back to replication (e.g. expert weights [E, d, f]:
+        E claims 'model' for expert parallelism, f then replicates)."""
+        used: set = set()
+        out = []
+        for d, a in zip(pd.shape, pd.axes):
+            r = self.resolve(d, a)
+            axes = r if isinstance(r, tuple) else (r,) if r else ()
+            if any(x in used for x in axes):
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(r)
+        return P(*out)
+
+
+def param_pspecs(schema: Schema, rules: ShardingRules) -> dict:
+    return map_schema(schema, rules.spec_for)
+
+
+def param_count(schema: Schema) -> int:
+    return sum(math.prod(pd.shape) for _, pd in _leaf_paths(schema))
+
+
+def param_bytes(schema: Schema) -> int:
+    return sum(
+        math.prod(pd.shape) * jnp.dtype(pd.dtype).itemsize
+        for _, pd in _leaf_paths(schema)
+    )

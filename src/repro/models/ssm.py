@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+TPU adaptation: the SSD algorithm is implemented in its *block-decomposition*
+form (intra-chunk quadratic attention-like matmuls + inter-chunk linear state
+recurrence), which maps the recurrence onto MXU matmuls with one short
+``lax.scan`` over chunks — instead of the per-timestep selective-scan CUDA
+kernel of the GPU reference.  Chunk length is a config knob (default 256,
+a multiple of the 128-lane MXU dimension).
+
+Decode keeps O(1) state: ``[B, H, P, N]`` SSM state plus a ``[B, d_conv-1,
+conv_dim]`` causal-conv window — this is what makes the 500k-context cell
+feasible where full-attention caches are not.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamDef, Schema
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def ssm_schema(cfg: ModelConfig) -> Schema:
+    s = cfg.ssm
+    pdt = cfg.param_dtype
+    d_inner, nheads, conv_dim = _dims(cfg)
+    in_dim = 2 * d_inner + 2 * s.ngroups * s.d_state + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef((cfg.d_model, in_dim), ("embed", "ssm_inner"), dtype=pdt),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "ssm_inner"), dtype=pdt, init="normal:0.1"),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), dtype=pdt, init="zeros"),
+        "A_log": ParamDef((nheads,), (None,), dtype=jnp.float32, init="zeros"),
+        "D": ParamDef((nheads,), (None,), dtype=jnp.float32, init="ones"),
+        "dt_bias": ParamDef((nheads,), (None,), dtype=jnp.float32, init="zeros"),
+        "norm": ParamDef((d_inner,), ("ssm_inner",), init="ones", dtype=pdt),
+        "out_proj": ParamDef((d_inner, cfg.d_model), ("ssm_inner", "embed"), dtype=pdt),
+    }
+
+
+def _split_zxbcdt(zxbcdt: jax.Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : 2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn :]
+    return z, xBC, dt
+
+
+def _gated_norm(params, y: jax.Array, z: jax.Array) -> jax.Array:
+    """RMSNorm(y * silu(z)) — Mamba2's gated output norm."""
+    dt = y.dtype
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(jnp.float32)).astype(dt)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < l <= i} a[..., l].
+
+    a: [..., L] -> [..., L, L] lower-triangular cumulative log-decays.
+    """
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.arange(l)[:, None] >= jnp.arange(l)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,     # [B, S, H, P]   (pre-scaled by dt)
+    a: jax.Array,     # [B, S, H]      log-decay per step (dt * A, negative)
+    B: jax.Array,     # [B, S, G, N]
+    C: jax.Array,     # [B, S, G, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """SSD block decomposition.  Returns (y [B,S,H,P], final_state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    nc = s // chunk
+    rep = h // g  # broadcast groups to heads
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)  # [b,nc,l,h,n]
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))            # [b,nc,h,l,l]
+    scores = jnp.einsum(
+        "bclhn,bcshn->bchls", Cc, Bc, preferred_element_type=jnp.float32
+    )
+    y_diag = jnp.einsum(
+        "bchls,bcshp->bclhp", scores * L, xc.astype(jnp.float32)
+    )
+
+    # ---- chunk states ----
+    cum = jnp.cumsum(ac, axis=2)                               # [b,nc,l,h]
+    last = cum[:, :, -1:, :]                                   # [b,nc,1,h]
+    decay_to_end = jnp.exp(last - cum)                         # [b,nc,l,h]
+    states = jnp.einsum(
+        "bclhn,bclh,bclhp->bchpn", Bc, decay_to_end, xc.astype(jnp.float32)
+    )                                                          # [b,nc,h,p,n]
+
+    # ---- inter-chunk recurrence (linear scan over nc chunks) ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])                    # [b,nc,h]
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(carry, xs):
+        st, dec = xs  # [b,h,p,n], [b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(
+        body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [b,nc,h,p,n]
+
+    # ---- inter-chunk output ----
+    y_off = jnp.einsum(
+        "bclhn,bclh,bchpn->bclhp", Cc, jnp.exp(cum), prev_states
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssm_apply(
+    params, xin: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Full-sequence Mamba2 block (train/prefill)."""
+    from repro.models.layers import constrain
+
+    s = cfg.ssm
+    cdt = cfg.compute_dtype
+    d_inner, nheads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("...d,de->...e", xin.astype(cdt), params["in_proj"].astype(cdt))
+    # keep the wide inner activation model-sharded through conv/SSD — without
+    # this the partitioner reshards [B,S,2*d_inner+...] per layer
+    if cfg.ssm_shard_constraints:
+        zxbcdt = constrain(zxbcdt, "batch", None, "model")
+    z, xBC, dt = _split_zxbcdt(zxbcdt, cfg)
+
+    # causal depthwise conv over the sequence (width d_conv)
+    pad = jnp.pad(xBC, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : pad.shape[1] - (s.d_conv - 1 - i), :] * params["conv_w"][i].astype(cdt)
+        for i in range(s.d_conv)
+    ) + params["conv_b"].astype(cdt)
+    xBC = jax.nn.silu(conv)
+
+    x_part = xBC[..., :d_inner]
+    gn = s.ngroups * s.d_state
+    Bv = xBC[..., d_inner : d_inner + gn]
+    Cv = xBC[..., d_inner + gn :]
+    b_, sl, _ = x_part.shape
+    xh = x_part.reshape(b_, sl, nheads, s.headdim)
+    Bm = Bv.reshape(b_, sl, s.ngroups, s.d_state)
+    Cm = Cv.reshape(b_, sl, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,s,h]
+    A = -jnp.exp(params["A_log"])                                     # [h]
+    y, _ = ssd_chunked(xh * dt[..., None].astype(cdt), dt * A, Bm, Cm, s.chunk)
+    y = y + params["D"].astype(cdt)[None, None, :, None] * xh
+    y = y.reshape(b_, sl, d_inner)
+    if cfg.ssm_shard_constraints:
+        y = constrain(y, "batch", None, "model")
+    y = _gated_norm(params, y, z)
+    return jnp.einsum("...e,ed->...d", y, params["out_proj"].astype(cdt))
+
+
+def ssm_decode(
+    params,
+    xin: jax.Array,        # [B, 1, d]
+    ssm_state: jax.Array,  # [B, H, P, N] fp32
+    conv_state: jax.Array, # [B, d_conv-1, conv_dim]
+    cfg: ModelConfig,
+):
+    """One-token recurrent update; returns (y, new_ssm_state, new_conv_state)."""
+    s = cfg.ssm
+    cdt = cfg.compute_dtype
+    d_inner, nheads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("...d,de->...e", xin.astype(cdt), params["in_proj"].astype(cdt))
+    z, xBC, dt = _split_zxbcdt(zxbcdt, cfg)          # [B,1,*]
+    window = jnp.concatenate([conv_state.astype(cdt), xBC], axis=1)  # [B,d_conv,conv_dim]
+    conv = jnp.einsum("btc,tc->bc", window, params["conv_w"].astype(cdt)) + params[
+        "conv_b"
+    ].astype(cdt)
+    xBC1 = jax.nn.silu(conv)                          # [B, conv_dim]
+    new_conv_state = window[:, 1:, :].astype(conv_state.dtype)
+
+    x_part = xBC1[..., :d_inner]
+    gn = s.ngroups * s.d_state
+    Bv = xBC1[..., d_inner : d_inner + gn].reshape(-1, s.ngroups, s.d_state)
+    Cv = xBC1[..., d_inner + gn :].reshape(-1, s.ngroups, s.d_state)
+    rep = nheads // s.ngroups
+    Bh = jnp.repeat(Bv, rep, axis=1).astype(jnp.float32)   # [B,H,N]
+    Ch = jnp.repeat(Cv, rep, axis=1).astype(jnp.float32)
+    xh = x_part.reshape(-1, nheads, s.headdim).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt1 * A)                              # [B,H]
+    upd = jnp.einsum("bhn,bhp->bhpn", Bh, xh * dt1[..., None])
+    new_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)        # [B,H,P]
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner).astype(cdt)
+    y = _gated_norm(params, y, z)
+    y = jnp.einsum("...e,ed->...d", y, params["out_proj"].astype(cdt))
+    return y, new_state, new_conv_state

@@ -1,0 +1,188 @@
+"""Three-term roofline analysis from a compiled (dry-run) artifact.
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = collective_B   / (chips * ICI_BW)
+
+``cost_analysis()`` provides FLOPs and bytes-accessed; collective bytes are
+NOT in cost_analysis, so we parse the compiled HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (one axis' worth of link bandwidth per collective hop).
+
+Note on SPMD accounting: with GSPMD the compiled module is per-device, so
+cost_analysis FLOPs/bytes and parsed collective shapes are already
+*per-chip* quantities; we therefore do NOT divide by the chip count again.
+The formulas above are expressed fleet-wide; per-chip input with per-chip
+denominator is equivalent.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,4096,512]{2,1,0}" or "(f32[8,128], u32[])"
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\d+|bf16|f16)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    We count the *result* shape of each collective start op (the data that
+    crosses the wire once per op under a ring schedule; a 2(n-1)/n factor
+    for all-gather/reduce-scatter ring traffic is within 2x and applied
+    uniformly, so relative comparisons are exact).
+    """
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # instruction lines look like: "%name = TYPE[...] all-reduce(...)"
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the opcode itself, not fusion names mentioning it
+            if re.search(rf"\)?\s{kind}(?:-start|-done)?\(", " " + rhs) or rhs.startswith(
+                kind + "("
+            ):
+                if kind + "-done" in rhs:
+                    break  # counted at -start
+                # result shape(s) appear before the opcode
+                head = rhs.split(kind)[0]
+                b = _shape_bytes(head)
+                counts[kind] += 1
+                by[kind] += b
+                break
+    return CollectiveStats(counts=counts, bytes_by_kind=by)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float          # per chip
+    hlo_gbytes: float          # per chip
+    collective_gbytes: float   # per chip
+    model_gflops: float        # 6*N*D (dense) or 6*N_active*D; fleet-wide / chips
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_flops_ratio: float
+    collective_counts: dict
+    memory_per_device_gb: float
+    step_time_s: float         # max of the three terms (no-overlap bound)
+    roofline_fraction: float   # compute_s / step_time_s (how compute-bound)
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    hlo_text: str,
+    model_flops_fleet: float,
+    memory_per_device_bytes: float,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: sum of operand + output traffic estimates
+    byts = float(
+        cost.get("bytes accessed", 0.0)
+        or sum(v for k, v in cost.items() if k.startswith("bytes accessed"))
+    )
+    coll = collective_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values()) if terms else float("nan")
+    model_flops_chip = model_flops_fleet / chips
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_gflops=flops / 1e9,
+        hlo_gbytes=byts / 1e9,
+        collective_gbytes=coll.total_bytes / 1e9,
+        model_gflops=model_flops_chip / 1e9,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_flops_ratio=(model_flops_chip / flops) if flops else 0.0,
+        collective_counts=coll.counts,
+        memory_per_device_gb=memory_per_device_bytes / 1e9,
+        step_time_s=step,
+        roofline_fraction=(compute_s / step) if step else 0.0,
+    )
+
+
+def model_flops(cfg, cell, param_count: int, active_param_count: int) -> float:
+    """MODEL_FLOPS: 6*N*D for train, 2*N*D for inference forward (prefill),
+    2*N_active*D_new for decode (D_new = batch tokens)."""
+    d_tokens = cell.global_batch * cell.seq_len
+    n = active_param_count
+    if cell.kind == "train":
+        return 6.0 * n * d_tokens
+    if cell.kind == "prefill":
+        return 2.0 * n * d_tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch

@@ -1,0 +1,3 @@
+from repro.sim.simulator import run_simulation, make_scheduler
+
+__all__ = ["run_simulation", "make_scheduler"]

@@ -1,0 +1,69 @@
+"""Simulation harness: drive any scheduler over any workload (paper §4.1)."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.base import Scheduler
+from repro.core.baselines import (
+    Eagle,
+    EagleConfig,
+    Pigeon,
+    PigeonConfig,
+    Sparrow,
+    SparrowConfig,
+)
+from repro.core.events import EventLoop
+from repro.core.megha import Megha, MeghaConfig
+from repro.core.metrics import RunMetrics
+from repro.workload.traces import Workload
+
+
+def make_scheduler(
+    name: str,
+    loop: EventLoop,
+    metrics: RunMetrics,
+    num_workers: int,
+    **kwargs,
+) -> Scheduler:
+    name = name.lower()
+    if name == "megha":
+        gms = kwargs.pop("num_gms", 8)
+        lms = kwargs.pop("num_lms", 8)
+        # shave workers so the partition grid divides evenly
+        per = num_workers // (gms * lms)
+        cfg = MeghaConfig(
+            num_workers=per * gms * lms, num_gms=gms, num_lms=lms, **kwargs
+        )
+        return Megha(loop, metrics, cfg)
+    if name == "sparrow":
+        return Sparrow(loop, metrics, SparrowConfig(num_workers=num_workers, **kwargs))
+    if name == "eagle":
+        return Eagle(loop, metrics, EagleConfig(num_workers=num_workers, **kwargs))
+    if name == "pigeon":
+        return Pigeon(loop, metrics, PigeonConfig(num_workers=num_workers, **kwargs))
+    raise ValueError(f"unknown scheduler {name!r}")
+
+
+def run_simulation(
+    scheduler: str,
+    workload: Workload,
+    num_workers: int,
+    max_events: Optional[int] = None,
+    until: Optional[float] = None,
+    hooks: Optional[Callable[[Scheduler, EventLoop], None]] = None,
+    **kwargs,
+) -> RunMetrics:
+    """Run one (scheduler, workload) simulation to completion.
+
+    ``hooks`` may inject fault events (GM/worker failures) after setup.
+    """
+    loop = EventLoop()
+    metrics = RunMetrics(scheduler=scheduler, workload=workload.name)
+    sched = make_scheduler(scheduler, loop, metrics, num_workers, **kwargs)
+    for job in workload.sorted_jobs():
+        loop.push_at(job.submit_time, lambda j=job: sched.submit(j))
+    if hooks is not None:
+        hooks(sched, loop)
+    loop.run(until=until, max_events=max_events)
+    return metrics

@@ -1,0 +1,143 @@
+"""Training step + loop: value_and_grad over the chunked-CE loss, AdamW,
+optional gradient accumulation (microbatching), donated buffers.
+
+``make_train_step(cfg, opt)`` builds the pure step function the launchers
+jit with explicit in/out shardings; ``train_loop`` is the host-side driver
+with checkpoint/restart fault tolerance.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train import optimizer as O
+
+
+def init_train_state(cfg: ModelConfig, opt: O.OptConfig, key: jax.Array) -> dict:
+    from repro.models.schema import init_params
+
+    params = init_params(M.model_schema(cfg), key)
+    return {"params": params, "opt": O.init_opt_state(params, opt)}
+
+
+def abstract_train_state(cfg: ModelConfig, opt: O.OptConfig) -> dict:
+    from repro.models.schema import abstract_params
+
+    params = abstract_params(M.model_schema(cfg))
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, opt.moment_dtype)
+    return {
+        "params": params,
+        "opt": {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+    }
+
+
+def train_state_pspecs(cfg: ModelConfig, mesh, *, fsdp: bool = False) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import model_pspecs
+
+    pspecs = model_pspecs(cfg, mesh, fsdp=fsdp)
+    return {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "step": P()},
+    }
+
+
+def make_train_step(
+    cfg: ModelConfig, opt: O.OptConfig, accum_steps: int = 1
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With ``accum_steps > 1`` the batch's leading dim is split into
+    microbatches and gradients are accumulated in a scan (memory for a k-fold
+    larger global batch at constant activation footprint).
+    """
+
+    def loss(params, batch):
+        return M.loss_fn(params, batch, cfg)
+
+    def train_step(state, batch):
+        if accum_steps == 1:
+            l, grads = jax.value_and_grad(loss)(state["params"], batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro = jax.tree.map(
+                lambda x: split(x) if x.ndim >= 1 else x, batch
+            )
+
+            def body(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss)(state["params"], mb)
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            (l, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+            l = l / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        new_params, new_opt, gnorm = O.adamw_update(
+            state["params"], grads, state["opt"], opt
+        )
+        metrics = {"loss": l, "grad_norm": gnorm, "step": new_opt["step"]}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_loop(
+    cfg: ModelConfig,
+    opt: O.OptConfig,
+    batches: Iterable[dict],
+    *,
+    steps: int,
+    seed: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 50,
+    log_every: int = 10,
+    state: Optional[dict] = None,
+) -> tuple[dict, list[dict]]:
+    """Host driver: restore-or-init, jitted steps, periodic checkpoints.
+
+    Returns (final_state, metrics_history).
+    """
+    from repro.train import checkpoint as C
+
+    start_step = 0
+    if state is None:
+        if checkpoint_dir is not None:
+            state, start_step = C.restore_latest(checkpoint_dir)
+        if state is None:
+            state = init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+    history: list[dict] = []
+    t0 = time.time()
+    it = iter(batches)
+    for i in range(start_step, steps):
+        batch = next(it)
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % log_every == 0 or i + 1 == steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["wall"] = time.time() - t0
+            history.append(m)
+        if checkpoint_dir is not None and (
+            (i + 1) % checkpoint_every == 0 or i + 1 == steps
+        ):
+            C.save(checkpoint_dir, state, step=i + 1)
+    return state, history

@@ -1,0 +1,18 @@
+from repro.workload.traces import Job, Task, Workload, load_workload
+from repro.workload.synth import (
+    synthetic_trace,
+    yahoo_like_trace,
+    google_like_trace,
+    downsampled,
+)
+
+__all__ = [
+    "Job",
+    "Task",
+    "Workload",
+    "load_workload",
+    "synthetic_trace",
+    "yahoo_like_trace",
+    "google_like_trace",
+    "downsampled",
+]

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see the default single CPU device (the 512-device override is
+# for the dry-run driver ONLY).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

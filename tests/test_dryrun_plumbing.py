@@ -1,0 +1,70 @@
+"""Dry-run plumbing on a 1-device mesh with smoke configs (the 512-device
+production sweep runs via `python -m repro.launch.dryrun`; this validates the
+same code path in-process)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ShapeCell
+from repro.launch.dryrun import lower_cell, reduced_cfg, unit_count
+from repro.roofline import analysis as R
+
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+
+CELLS = {
+    "train": ShapeCell("train_tiny", "train", 64, 2),
+    "prefill": ShapeCell("prefill_tiny", "prefill", 64, 2),
+    "decode": ShapeCell("decode_tiny", "decode", 64, 2),
+}
+
+
+def _cfg(arch):
+    cfg = smoke_config(get_config(arch))
+    return dataclasses.replace(cfg, loss_chunk=16)
+
+
+@pytest.mark.parametrize("arch", ["qwen15_05b", "mamba2_13b", "deepseek_v2_lite_16b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_lower_and_compile_cell(arch, kind):
+    cfg = _cfg(arch)
+    cell = CELLS[kind]
+    lowered, meta = lower_cell(cfg, cell, MESH, fsdp=False)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0]
+    assert cost.get("flops", 0) > 0
+    assert compiled.as_text()  # HLO available for collective parsing
+
+
+def test_unit_count_and_reduced_cfg():
+    z = get_config("zamba2_7b")
+    assert unit_count(z) == 13
+    r = reduced_cfg(z, 2, CELLS["train"])
+    assert r.num_layers == 2 * 6 + 3
+    assert r.scan_layers is False
+
+    d = get_config("deepseek_v2_lite_16b")
+    assert unit_count(d) == 26
+    rd = reduced_cfg(d, 1, CELLS["train"])
+    assert rd.num_layers == 2  # 1 dense + 1 moe
+
+    q = get_config("qwen15_05b")
+    assert unit_count(q) == 24
+
+
+def test_extrapolation_is_linear():
+    from repro.launch.dryrun import _extrapolate
+
+    c1 = {"flops": 10.0, "bytes": 100.0, "coll_bytes": 5.0,
+          "coll_counts": {"all-reduce": 2}}
+    c2 = {"flops": 14.0, "bytes": 130.0, "coll_bytes": 8.0,
+          "coll_counts": {"all-reduce": 3}}
+    out = _extrapolate(c1, c2, 10)
+    assert out["flops"] == pytest.approx(10 + 4 * 9)
+    assert out["bytes"] == pytest.approx(100 + 30 * 9)
+    assert out["coll_counts"]["all-reduce"] == 2 + 9

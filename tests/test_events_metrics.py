@@ -1,0 +1,71 @@
+import math
+
+import pytest
+
+from repro.core.events import EventLoop
+from repro.core.metrics import JobRecord, TaskRecord, percentile
+
+
+def test_event_ordering_deterministic():
+    loop = EventLoop()
+    seen = []
+    loop.push(0.5, lambda: seen.append("b"))
+    loop.push(0.1, lambda: seen.append("a"))
+    loop.push(0.5, lambda: seen.append("c"))  # same time: insertion order
+    loop.run()
+    assert seen == ["a", "b", "c"]
+    assert loop.now == 0.5
+
+
+def test_event_cancellation():
+    loop = EventLoop()
+    seen = []
+    ev = loop.push(1.0, lambda: seen.append("x"))
+    loop.push(0.5, lambda: EventLoop.cancel(ev))
+    loop.run()
+    assert seen == []
+
+
+def test_run_until():
+    loop = EventLoop()
+    seen = []
+    for t in (1.0, 2.0, 3.0):
+        loop.push(t, lambda t=t: seen.append(t))
+    loop.run(until=2.5)
+    assert seen == [1.0, 2.0]
+    assert loop.now == 2.5
+    loop.run()
+    assert seen == [1.0, 2.0, 3.0]
+
+
+def test_negative_delay_rejected():
+    loop = EventLoop()
+    with pytest.raises(ValueError):
+        loop.push(-1.0, lambda: None)
+
+
+def test_percentile_matches_numpy():
+    import numpy as np
+
+    xs = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6]
+    for p in (0, 25, 50, 90, 95, 100):
+        assert percentile(xs, p) == pytest.approx(float(np.percentile(xs, p)))
+    assert math.isnan(percentile([], 50))
+
+
+def test_task_delay_decomposition():
+    tr = TaskRecord(job_id=0, task_index=0, duration=1.0, submit_time=10.0)
+    tr.start_time = 10.5
+    tr.finish_time = 11.5
+    tr.d_comm = 0.3
+    tr.d_queue_scheduler = 0.2
+    assert tr.tct == pytest.approx(1.5)
+    assert tr.delay == pytest.approx(0.5)
+    assert tr.decomposition_residual() == pytest.approx(0.0)
+
+
+def test_job_record_delay():
+    jr = JobRecord(job_id=0, submit_time=0.0, ideal_jct=2.0, num_tasks=3)
+    jr.finish_time = 2.5
+    assert jr.jct == pytest.approx(2.5)
+    assert jr.delay == pytest.approx(0.5)

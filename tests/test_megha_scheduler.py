@@ -1,0 +1,111 @@
+import math
+
+import pytest
+
+from repro.core.events import NETWORK_DELAY
+from repro.core.megha import Megha, MeghaConfig
+from repro.core.metrics import RunMetrics
+from repro.sim.simulator import run_simulation
+from repro.workload.synth import synthetic_trace, yahoo_like_trace
+from repro.workload.traces import Job, Workload
+
+
+def _run(wl, workers=256, **kw):
+    return run_simulation("megha", wl, num_workers=workers, **kw)
+
+
+def test_all_jobs_complete():
+    wl = synthetic_trace(num_jobs=10, tasks_per_job=20, load=0.5, num_workers=256)
+    m = _run(wl)
+    assert all(not math.isnan(j.finish_time) for j in m.jobs)
+    assert len(m.tasks) == wl.num_tasks
+
+
+def test_uncontended_delay_is_three_hops():
+    """§5.1: 'Under all loads and DC sizes, Megha delivers a median delay of
+    0.0015s' — exactly client->GM + GM->LM + LM->worker."""
+    wl = Workload("one", [Job(0, 0.0, [1.0] * 8)])
+    m = _run(wl, workers=256)
+    for t in m.tasks:
+        assert t.delay == pytest.approx(3 * NETWORK_DELAY, abs=1e-9)
+
+
+def test_inconsistencies_rise_with_load():
+    """Fig. 2b: inconsistency events per task grow as load -> 1."""
+    lo = _run(synthetic_trace(num_jobs=30, tasks_per_job=50, load=0.3,
+                              num_workers=512, seed=7), workers=512)
+    hi = _run(synthetic_trace(num_jobs=30, tasks_per_job=50, load=0.95,
+                              num_workers=512, seed=7), workers=512)
+    assert hi.inconsistency_ratio > lo.inconsistency_ratio
+    # and an uncontended run has (near-)zero inconsistencies
+    tiny = _run(synthetic_trace(num_jobs=10, tasks_per_job=10, load=0.1,
+                                num_workers=512, seed=7), workers=512)
+    assert tiny.inconsistency_ratio <= 0.02
+
+
+def test_repartition_borrows_when_internal_saturated():
+    # one giant job saturates its GM's internal partitions -> must borrow
+    wl = Workload("big", [Job(0, 0.0, [5.0] * 200)])
+    m = _run(wl, workers=256, num_gms=8, num_lms=8)
+    assert m.repartitions > 0
+    assert all(not math.isnan(j.finish_time) for j in m.jobs)
+
+
+def test_megha_never_queues_at_workers():
+    wl = yahoo_like_trace(num_jobs=100, total_tasks=1500, load=0.7,
+                          num_workers=256, seed=3)
+    m = _run(wl)
+    assert all(t.d_queue_worker == 0.0 for t in m.tasks)
+
+
+def test_gm_failure_recovery():
+    """§3.5: GMs are stateless; a fresh GM rebuilds its view from LM state."""
+    from repro.core.events import EventLoop
+
+    loop = EventLoop()
+    metrics = RunMetrics("megha", "failover")
+    cfg = MeghaConfig(num_workers=64, num_gms=4, num_lms=4)
+    sched = Megha(loop, metrics, cfg)
+
+    jobs = [Job(i, 0.01 * i, [1.0] * 4) for i in range(8)]
+    for j in jobs:
+        loop.push_at(j.submit_time, lambda j=j: sched.submit(j))
+
+    def kill_and_recover():
+        orphaned = sched.fail_gm(1)
+        gm = sched.recover_gm(1)
+        # recovered view must match LM ground truth exactly
+        for lm in sched.lms:
+            base = lm.lm_id * cfg.workers_per_lm
+            for g in range(cfg.num_gms):
+                for w in cfg.partition_workers(lm.lm_id, g):
+                    in_view = any(w in gm.free[(g2, lm.lm_id)] for g2 in range(cfg.num_gms))
+                    assert in_view == lm.avail[w - base]
+        for j in orphaned:
+            sched.submit(j)  # resubmit per availability contract
+
+    loop.push_at(0.5, kill_and_recover)
+    loop.run()
+    done = [j for j in metrics.jobs if not math.isnan(j.finish_time)]
+    # every task of every completed job record finished
+    assert len(done) >= 8  # resubmitted jobs may duplicate records
+
+
+def test_worker_failure_reruns_task():
+    from repro.core.events import EventLoop
+
+    loop = EventLoop()
+    metrics = RunMetrics("megha", "workerfail")
+    cfg = MeghaConfig(num_workers=16, num_gms=2, num_lms=2)
+    sched = Megha(loop, metrics, cfg)
+    sched.submit(Job(0, 0.0, [2.0] * 4))
+    loop.push_at(1.0, lambda: sched.fail_worker(0))
+    loop.run()
+    job = metrics.jobs[0]
+    assert not math.isnan(job.finish_time)
+
+
+def test_batching_respects_limit():
+    wl = Workload("burst", [Job(0, 0.0, [1.0] * 100)])
+    m = run_simulation("megha", wl, num_workers=256, batch_limit=16)
+    assert all(not math.isnan(j.finish_time) for j in m.jobs)

@@ -1,0 +1,85 @@
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, smoke_config
+from repro.models import model as M
+from repro.models.schema import (
+    ParamDef,
+    ShardingRules,
+    abstract_params,
+    param_count,
+    param_pspecs,
+)
+
+SIZES = {"data": 16, "model": 16}
+
+
+def _rules(fsdp=False):
+    return ShardingRules(
+        rules={
+            "vocab": "model", "heads": "model", "kv_heads": "model",
+            "mlp": "model", "experts": "model", "ssm_inner": "model",
+            "embed": "data" if fsdp else None, "head_dim": None, "layers": None,
+        },
+        mesh_axis_sizes=SIZES,
+    )
+
+
+def test_divisibility_fallback_replicates():
+    r = _rules()
+    # 56 heads (arctic) don't divide 16 -> replicated
+    pd = ParamDef((7168, 56, 128), ("embed", "heads", "head_dim"))
+    assert r.spec_for(pd) == P(None, None, None)
+    # 32 heads divide -> sharded
+    pd2 = ParamDef((4096, 32, 128), ("embed", "heads", "head_dim"))
+    assert r.spec_for(pd2) == P(None, "model", None)
+
+
+def test_duplicate_mesh_axis_dedup():
+    r = _rules(fsdp=True)
+    pd = ParamDef((2, 128, 2048, 1408), ("layers", "experts", "embed", "mlp"))
+    spec = r.spec_for(pd)
+    assert spec == P(None, "model", "data", None)  # mlp loses 'model' to experts
+
+
+def test_arctic_pspecs_have_no_duplicates():
+    cfg = get_config("arctic_480b")
+    specs = param_pspecs(M.model_schema(cfg), _rules(fsdp=True))
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        axes = [a for part in s for a in ((part,) if isinstance(part, str) else (part or ()))]
+        assert len(axes) == len(set(axes)), s
+
+
+def test_pspec_tree_congruent_with_params():
+    cfg = smoke_config(get_config("deepseek_v2_lite_16b"))
+    sch = M.model_schema(cfg)
+    abst = abstract_params(sch)
+    specs = param_pspecs(sch, _rules())
+    la = jax.tree.leaves(abst)
+    ls = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(la) == len(ls)
+    for a, s in zip(la, ls):
+        assert len(s) == len(a.shape)
+
+
+def test_vocab_padding():
+    assert get_config("hubert_xlarge").padded_vocab == 512
+    assert get_config("mamba2_13b").padded_vocab % 256 == 0
+    assert get_config("llama3_8b").padded_vocab == 128256  # already aligned
+
+
+def test_cache_pspecs_match_cache_spec_structure():
+    from repro.dist.sharding import cache_pspecs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import decode as D
+
+    mesh = make_host_mesh()
+    for arch in ("llama3_8b", "mamba2_13b", "zamba2_7b", "deepseek_v2_lite_16b"):
+        cfg = get_config(arch)
+        spec = D.cache_spec(cfg, 8, 64)
+        ps = cache_pspecs(cfg, mesh, 8, 64)
+        assert set(spec) == set(ps)
+        for k in spec:
+            assert len(ps[k]) == len(spec[k].shape), (arch, k)
