@@ -1,0 +1,97 @@
+"""Events vs. simx backend throughput: tasks/sec per sweep point.
+
+The headline number for the simx tentpole: scheduling throughput
+(tasks simulated per wall-clock second) of the pure-Python event loop vs.
+the compiled round-stepped backend on the same load-0.8 synthetic trace at
+1k / 4k / 16k workers.  The trace holds the arrival span fixed (~12 s of
+simulated time), so the task count scales with DC size exactly like a
+Fig. 2 sweep point: events cost scales with the task count, simx with the
+round count (span / dt) — the bigger the DC, the wider the gap.
+
+simx rows are timed warm (the compiled program is the artifact a sweep
+reuses across its whole grid); the one-off compile wall-clock is reported
+alongside.  Two round lengths are reported: dt=0.05 (the engine default,
+5% of the 1 s task duration) and dt=0.1 (coarser quantization, ~2x the
+throughput — fine for relative sweeps).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.sim.simulator import run_simulation
+from repro.simx import engine as sxe
+from repro.simx import megha as sxm
+from repro.simx.state import SimxConfig, export_workload, init_megha_state
+from repro.workload.synth import synthetic_trace
+
+DC_SIZES = (1024, 4096, 16384)
+DC_SIZES_FULL = (1024, 4096, 16384, 50_000)
+SPAN = 12.0      # seconds of simulated arrivals per sweep point
+TASKS_PER_JOB = 128
+LOAD = 0.8
+
+
+def _trace(workers: int):
+    jobs = max(8, int(LOAD * workers * SPAN / TASKS_PER_JOB))
+    return synthetic_trace(
+        num_jobs=jobs,
+        tasks_per_job=TASKS_PER_JOB,
+        load=LOAD,
+        num_workers=workers,
+        seed=13,
+    )
+
+
+def _simx_point(wl, workers: int, dt: float) -> dict:
+    cfg = SimxConfig(num_workers=(workers // 64) * 64, dt=dt)
+    tasks = export_workload(wl)
+    orders = sxm.gm_orders(jax.random.PRNGKey(0), cfg)
+    step = sxm.make_megha_step(cfg, tasks, orders)
+    state0 = init_megha_state(cfg, tasks.num_tasks)
+    cap = sxe.estimate_rounds(cfg, tasks)
+    runner = sxe.make_chunk_runner(step, chunk=32)
+    t0 = time.time()
+    jax.block_until_ready(runner(state0))
+    compile_wall = time.time() - t0
+    t0 = time.time()
+    state = sxe.run_to_completion(
+        step, state0, chunk=32, max_rounds=cap, runner=runner
+    )
+    wall = time.time() - t0
+    done = int((state.task_finish <= state.t).sum())
+    return {"wall": wall, "compile": compile_wall, "done": done}
+
+
+def run(full: bool = False) -> list[str]:
+    rows = []
+    for workers in DC_SIZES_FULL if full else DC_SIZES:
+        wl = _trace(workers)
+        n_tasks = wl.num_tasks
+
+        t0 = time.time()
+        run_simulation("megha", wl, num_workers=workers, seed=0)
+        ev_wall = time.time() - t0
+        ev_tps = n_tasks / ev_wall
+        rows.append(
+            f"simx_dc{workers}_events,{ev_wall * 1e6 / n_tasks:.2f},"
+            f"tasks_per_sec={ev_tps:.0f};wall={ev_wall:.2f}s;tasks={n_tasks}"
+        )
+
+        for dt in (0.05, 0.1):
+            r = _simx_point(wl, workers, dt)
+            tps = n_tasks / r["wall"]
+            rows.append(
+                f"simx_dc{workers}_simx_dt{dt:g},{r['wall'] * 1e6 / n_tasks:.2f},"
+                f"tasks_per_sec={tps:.0f};wall={r['wall']:.2f}s;"
+                f"compile={r['compile']:.2f}s;done={r['done']}/{n_tasks};"
+                f"speedup={tps / ev_tps:.1f}x"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

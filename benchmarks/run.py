@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: comparison,scalability,"
-                         "prototype,sdps,workloads,kernels")
+                         "prototype,sdps,workloads,kernels,simx")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -25,6 +25,7 @@ def main() -> None:
         bench_prototype,
         bench_scalability,
         bench_sdps,
+        bench_simx,
         bench_workloads,
     )
 
@@ -35,6 +36,7 @@ def main() -> None:
         "prototype": bench_prototype,
         "sdps": bench_sdps,
         "kernels": bench_kernels,
+        "simx": bench_simx,
     }
     picked = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

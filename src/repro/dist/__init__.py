@@ -1,0 +1,1 @@
+"""Distributed-execution helpers: logical->mesh sharding rules."""

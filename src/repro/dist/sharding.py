@@ -1,0 +1,155 @@
+"""Canonical sharding policy: PartitionSpec trees for params, caches, batches.
+
+One place owns the logical-axis -> mesh-axis mapping so the dry-run driver,
+the train loop, and the serving engine agree on layouts:
+
+  * ``model_pspecs``  — parameter specs from the schema's logical axes
+                        (tensor parallel over "model"; optional FSDP shards
+                        the "embed" axis over "data").
+  * ``cache_pspecs``  — decode-cache specs congruent with
+                        ``decode.cache_spec`` (batch over the data axes, KV
+                        heads / channels over "model" where divisible).
+  * ``batch_pspecs``  — input-batch specs congruent with
+                        ``decode.input_specs`` (leading batch dim over the
+                        data axes).
+  * ``batch_axes``    — the data-parallel mesh axes ("data", plus "pod" on
+                        the multi-pod mesh).
+  * ``named``         — map a PartitionSpec tree to NamedShardings.
+
+Every assignment applies the same divisibility guard as
+``schema.ShardingRules``: a dim that does not divide its mesh axes falls
+back to replication rather than erroring.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import mesh_axis_sizes
+from repro.models.schema import ShardingRules, param_pspecs
+
+#: Logical parameter axes that carry tensor/expert parallelism.
+MODEL_AXES = ("vocab", "heads", "kv_heads", "mlp", "experts", "ssm_inner")
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Union[str, tuple[str, ...]]:
+    """The mesh axes carrying data parallelism (valid inside a P())."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def _dp_size(mesh: jax.sharding.Mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    return math.prod(sizes[a] for a in (ba if isinstance(ba, tuple) else (ba,)))
+
+
+def sharding_rules(mesh: jax.sharding.Mesh, *, fsdp: bool = False) -> ShardingRules:
+    """The repo-wide logical->mesh rule set (see tests/test_schema_sharding)."""
+    rules: dict[str, Any] = {a: "model" for a in MODEL_AXES}
+    rules.update(
+        {
+            "embed": "data" if fsdp else None,
+            "head_dim": None,
+            "layers": None,
+        }
+    )
+    return ShardingRules(rules=rules, mesh_axis_sizes=mesh_axis_sizes(mesh))
+
+
+def model_pspecs(cfg: ModelConfig, mesh: jax.sharding.Mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree for the model parameters of ``cfg``."""
+    from repro.models import model as M  # deferred: model imports are heavy
+
+    return param_pspecs(M.model_schema(cfg), sharding_rules(mesh, fsdp=fsdp))
+
+
+def named(mesh: jax.sharding.Mesh, tree):
+    """Map every PartitionSpec leaf of ``tree`` to a NamedSharding."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _guarded(dim: int, axes, sizes: dict[str, int]):
+    """Shard ``dim`` over ``axes`` only if it divides their product."""
+    t = axes if isinstance(axes, tuple) else (axes,)
+    total = math.prod(sizes.get(a, 1) for a in t)
+    if total <= 1 or dim % total != 0:
+        return None
+    return axes
+
+
+#: cache key -> (index of the batch dim, index of the "model"-sharded dim).
+#: Negative model indices count from the right; None = replicate.
+_CACHE_LAYOUT: dict[str, tuple[int, Any]] = {
+    # attention KV: [L, B, T, KV, D] — batch at 1, kv heads at -2
+    "k": (1, -2),
+    "v": (1, -2),
+    "dense_k": (1, -2),
+    "dense_v": (1, -2),
+    # hybrid shared-attn KV: [G, B, T, KV, D]
+    "attn_k": (1, -2),
+    "attn_v": (1, -2),
+    # MLA absorbed latent: [L, B, T, r+rope] — latent width rarely divides
+    "latent": (1, -1),
+    "dense_latent": (1, -1),
+    # SSM recurrent state: [L, B, H, P, N] — heads at 2
+    "state": (1, 2),
+    "t_state": (1, 2),
+    # SSM conv buffer: [L, B, w, C] — conv channels last
+    "conv": (1, -1),
+    "t_conv": (1, -1),
+    # hybrid per-group SSM: [G, per, B, ...]
+    "g_state": (2, 3),
+    "g_conv": (2, -1),
+}
+
+
+def cache_pspecs(
+    cfg: ModelConfig, mesh: jax.sharding.Mesh, batch: int, seq_len: int
+) -> dict:
+    """PartitionSpecs congruent with ``decode.cache_spec(cfg, batch, seq_len)``."""
+    from repro.models import decode as D
+
+    sizes = mesh_axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    out = {}
+    for key, sds in D.cache_spec(cfg, batch, seq_len).items():
+        rank = len(sds.shape)
+        parts: list[Any] = [None] * rank
+        bidx, midx = _CACHE_LAYOUT[key]
+        parts[bidx] = _guarded(sds.shape[bidx], ba, sizes)
+        if midx is not None:
+            m = midx % rank
+            if m != bidx:
+                parts[m] = _guarded(sds.shape[m], "model", sizes)
+        out[key] = P(*parts)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh: jax.sharding.Mesh) -> dict:
+    """PartitionSpecs congruent with ``decode.input_specs(cfg, cell)``:
+    leading batch dim over the data axes, everything else replicated."""
+    from repro.models import decode as D
+
+    sizes = mesh_axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    out = {}
+    for key, sds in D.input_specs(cfg, cell).items():
+        rank = len(sds.shape)
+        if rank == 0:
+            out[key] = P()
+            continue
+        parts: list[Any] = [None] * rank
+        parts[0] = _guarded(sds.shape[0], ba, sizes)
+        out[key] = P(*parts)
+    return out

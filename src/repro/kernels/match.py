@@ -28,6 +28,72 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 
 
+def _match_kernel_batched(n_tasks_ref, avail_ref, out_ref, carry_ref):
+    """One (1, block_rows, 128) tile of one GM's rank-and-select scan.
+
+    Grid is (G, row_blocks); TPU iterates the trailing grid dim fastest, so
+    each GM g walks its row-blocks b = 0..B-1 in order and the SMEM carry is
+    reset at b == 0 — G independent blocked scans in one kernel launch.
+    """
+    g = pl.program_id(0)
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    a = avail_ref[...].astype(jnp.int32)  # (1, block_rows, 128)
+    flat = a.reshape(-1)
+    local = jnp.cumsum(flat) - 1
+    rank = local + carry_ref[0]
+    n = n_tasks_ref[g]
+    take = (flat > 0) & (rank < n)
+    out_ref[...] = jnp.where(take, rank, -1).reshape(a.shape)
+    carry_ref[0] = carry_ref[0] + jnp.sum(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def match_ranks_batched(
+    avail: jax.Array,
+    n_tasks: jax.Array,
+    *,
+    block_rows: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched ``match_ranks``: all GMs match in one kernel launch.
+
+    Args:
+      avail: int8/int32/bool[G, W] — per-GM availability, each row in that
+        GM's priority order; W padded to a multiple of ``block_rows * 128``.
+      n_tasks: int32[G] — tasks each GM wants to place.
+      block_rows / interpret: as in ``match_ranks``.
+
+    Returns: int32[G, W] per-GM task ranks, -1 where no task is assigned.
+    """
+    g, w = avail.shape
+    block = block_rows * LANES
+    w_pad = -(-w // block) * block
+    a = jnp.zeros((g, w_pad), jnp.int8).at[:, :w].set(avail.astype(jnp.int8))
+    a3 = a.reshape(g, w_pad // LANES, LANES)
+    n = jnp.asarray(n_tasks, jnp.int32).reshape(g)
+
+    grid = (g, w_pad // block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_rows, LANES), lambda g, b, n: (g, b, 0))],
+        out_specs=pl.BlockSpec((1, block_rows, LANES), lambda g, b, n: (g, b, 0)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        _match_kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, w_pad // LANES, LANES), jnp.int32),
+        interpret=interpret,
+    )(n, a3)
+    return out.reshape(g, -1)[:, :w]
+
+
 def _match_kernel(n_tasks_ref, avail_ref, out_ref, carry_ref):
     """One (block_rows, 128) tile of the blocked rank-and-select scan."""
     b = pl.program_id(0)

@@ -31,6 +31,22 @@ def match_ranks_ref(avail: jax.Array, n_tasks: jax.Array | int) -> jax.Array:
     return jnp.where(take, rank, -1)
 
 
+def match_ranks_batched_ref(avail: jax.Array, n_tasks: jax.Array) -> jax.Array:
+    """Batched reference: ``match_ranks_ref`` vmapped over a leading GM axis.
+
+    Args:
+      avail: int8/bool[G, W] — per-GM priority-ordered availability.
+      n_tasks: int32[G] — tasks each GM wants to place.
+
+    Returns: int32[G, W] per-GM task ranks, -1 where no task is assigned.
+    """
+    a = avail.astype(jnp.int32)
+    rank = jnp.cumsum(a, axis=-1) - 1
+    n = jnp.asarray(n_tasks, jnp.int32)[..., None]
+    take = (a > 0) & (rank < n)
+    return jnp.where(take, rank, -1)
+
+
 def match_tasks_ref(
     avail: jax.Array, n_tasks: jax.Array | int, max_tasks: int
 ) -> tuple[jax.Array, jax.Array]:

@@ -1,4 +1,14 @@
-"""Simulation harness: drive any scheduler over any workload (paper §4.1)."""
+"""Simulation harness: drive any scheduler over any workload (paper §4.1).
+
+Two interchangeable backends behind one entry point:
+
+  * ``backend="events"`` — the faithful discrete-event simulation
+    (``repro.core``): exact message timing, all four schedulers, fault
+    injection hooks.
+  * ``backend="simx"``   — the vectorized JAX backend (``repro.simx``):
+    round-synchronous dense-array simulation that jits/vmaps for
+    datacenter-scale sweeps (megha + sparrow).
+"""
 
 from __future__ import annotations
 
@@ -52,12 +62,29 @@ def run_simulation(
     max_events: Optional[int] = None,
     until: Optional[float] = None,
     hooks: Optional[Callable[[Scheduler, EventLoop], None]] = None,
+    backend: str = "events",
     **kwargs,
 ) -> RunMetrics:
     """Run one (scheduler, workload) simulation to completion.
 
-    ``hooks`` may inject fault events (GM/worker failures) after setup.
+    ``hooks`` may inject fault events (GM/worker failures) after setup
+    (events backend only).  ``backend="simx"`` routes to the vectorized JAX
+    backend; scheduler kwargs (num_gms, num_lms, heartbeat_interval, seed,
+    probe_ratio) carry over, plus simx-specific ones (dt, chunk, use_pallas).
     """
+    if backend == "simx":
+        if hooks is not None:
+            raise ValueError("fault-injection hooks require backend='events'")
+        if max_events is not None:
+            raise ValueError("max_events is event-backend-only; use until")
+        from repro.simx import simulate_workload
+
+        run = simulate_workload(
+            scheduler, workload, num_workers, until=until, **kwargs
+        )
+        return run.to_run_metrics()
+    if backend != "events":
+        raise ValueError(f"unknown backend {backend!r}")
     loop = EventLoop()
     metrics = RunMetrics(scheduler=scheduler, workload=workload.name)
     sched = make_scheduler(scheduler, loop, metrics, num_workers, **kwargs)

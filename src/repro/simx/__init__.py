@@ -1,0 +1,42 @@
+"""simx: vectorized, JAX-compiled simulation backend for datacenter sweeps.
+
+A second simulation backend beside the event-driven one (``repro.core``):
+Megha and the Sparrow baseline reformulated as fixed-timestep synchronous
+rounds over dense arrays, advanced under ``jax.lax.scan`` and ``vmap``-able
+over seeds/configs.  Select it via
+``run_simulation(..., backend="simx")``.
+"""
+
+from repro.simx.engine import (
+    SCHEDULERS,
+    SimxRun,
+    estimate_rounds,
+    run_to_completion,
+    scan_rounds,
+    simulate_workload,
+)
+from repro.simx.state import (
+    MeghaState,
+    SimxConfig,
+    SparrowState,
+    TaskArrays,
+    export_workload,
+    init_megha_state,
+    init_sparrow_state,
+)
+
+__all__ = [
+    "SCHEDULERS",
+    "SimxRun",
+    "SimxConfig",
+    "TaskArrays",
+    "MeghaState",
+    "SparrowState",
+    "estimate_rounds",
+    "export_workload",
+    "init_megha_state",
+    "init_sparrow_state",
+    "run_to_completion",
+    "scan_rounds",
+    "simulate_workload",
+]

@@ -1,0 +1,283 @@
+"""simx engine: fixed-timestep, JAX-compiled datacenter simulation.
+
+**Round-synchronous approximation.** The event-driven backend
+(``repro.core``) fires every message, launch, and completion at its exact
+simulated timestamp, one Python callback at a time.  simx instead advances
+the whole datacenter in fixed rounds of ``cfg.dt`` simulated seconds under
+``jax.lax.scan``: within a round, completions are processed first, then
+(periodically) heartbeats, then every GM matches and every LM verifies —
+simultaneously, with conflicts arbitrated by a per-round rotating GM
+priority.  The semantic differences vs. the event backend:
+
+  * **Time quantization** — scheduling reactions (a queued task seeing a
+    freed worker, an arrival being matched) happen at the next round
+    boundary instead of one network hop after the triggering event, adding
+    up to ``dt`` of latency per reaction (launch/finish timestamps
+    themselves stay exact: ``start = round_time + hops``,
+    ``finish = start + duration``).  Pick ``dt`` well under the typical task
+    duration and the aggregate delay distributions converge to the event
+    backend's (the parity tests pin this).
+  * **Message interleaving** — the event backend serializes same-time
+    events in insertion order; simx resolves a whole round's claims at
+    once, so per-task placements can differ even though aggregate behavior
+    matches.  Runs are still bit-deterministic for a fixed (config, seed).
+  * **Batch granularity** — per-(GM, LM) request batching is implicit (one
+    round = one batch) rather than bounded by ``batch_limit``.
+
+What this buys: the entire simulation is one compiled program — a Fig. 2
+sweep point at 50k workers is a ``scan`` over dense ``[G, W]`` arrays, and a
+whole (seed x config) grid runs as one ``vmap``.  See
+``benchmarks/bench_simx.py`` for the events-vs-simx throughput comparison.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.base import LONG_JOB_THRESHOLD
+from repro.core.metrics import JobRecord, RunMetrics, TaskRecord, classify_long
+from repro.simx import megha as simx_megha
+from repro.simx import sparrow as simx_sparrow
+from repro.simx.state import (
+    MeghaState,
+    SimxConfig,
+    SparrowState,
+    TaskArrays,
+    export_workload,
+    init_megha_state,
+    init_sparrow_state,
+)
+from repro.workload.traces import Workload
+
+#: Schedulers the simx backend implements.
+SCHEDULERS = ("megha", "sparrow")
+
+
+def scan_rounds(step: Callable, state, num_rounds: int):
+    """Advance ``state`` by ``num_rounds`` rounds under one lax.scan."""
+    state, _ = jax.lax.scan(
+        lambda s, _: (step(s), None), state, None, length=num_rounds
+    )
+    return state
+
+
+def make_chunk_runner(step: Callable, chunk: int = 256) -> Callable:
+    """Jit a ``chunk``-round advance of ``step``; reuse it across runs to
+    amortize compilation (a fresh jit per call would recompile)."""
+    return jax.jit(lambda s: scan_rounds(step, s, chunk))
+
+
+def run_to_completion(
+    step: Callable,
+    state,
+    *,
+    chunk: int = 256,
+    max_rounds: int = 1_000_000,
+    runner: Optional[Callable] = None,
+):
+    """Drive ``step`` in jitted ``chunk``-round scans until every task is
+    done (or ``max_rounds`` as a runaway guard).  Returns the final state.
+
+    A precompiled ``runner`` (from ``make_chunk_runner``) may be supplied to
+    amortize compilation across runs; it MUST advance exactly ``chunk``
+    rounds per call — pass the same chunk to both.
+
+    ``max_rounds`` is exact: a final partial chunk runs un-jitted so the
+    state never advances past the budget (this is what makes an ``until``
+    horizon cap precise)."""
+    run_chunk = runner if runner is not None else make_chunk_runner(step, chunk)
+    rounds = 0
+    while rounds < max_rounds:
+        n = min(chunk, max_rounds - rounds)
+        state = run_chunk(state) if n == chunk else scan_rounds(step, state, n)
+        rounds += n
+        if bool(jnp.all(state.task_finish <= state.t)):
+            break
+    return state
+
+
+def estimate_rounds(cfg: SimxConfig, tasks: TaskArrays, slack: float = 4.0) -> int:
+    """Upper-bound round count: arrival span + ``slack`` x the perfectly
+    packed drain time + the longest task + one heartbeat interval."""
+    span = (
+        float(jnp.max(tasks.submit))
+        + slack * float(jnp.sum(tasks.duration)) / cfg.num_workers
+        + float(jnp.max(tasks.duration))
+        + cfg.heartbeat_interval
+        + 1.0
+    )
+    return int(math.ceil(span / cfg.dt))
+
+
+@dataclass
+class SimxRun:
+    """A finished simx simulation plus everything needed to report it."""
+
+    scheduler: str
+    workload_name: str
+    cfg: SimxConfig
+    tasks: TaskArrays
+    state: MeghaState | SparrowState
+
+    @property
+    def end_time(self) -> float:
+        return float(self.state.t)
+
+    @property
+    def tasks_completed(self) -> int:
+        return int(jnp.sum(self.state.task_finish <= self.state.t))
+
+    def job_finish_times(self) -> np.ndarray:
+        """float64[J] job finish (max task finish; nan if any task unfinished)."""
+        finish = np.asarray(self.state.task_finish, np.float64)
+        # launched-but-unfinished tasks carry a future finish time; treat
+        # anything past the simulated end as not completed
+        finish = np.where(finish <= self.end_time, finish, np.inf)
+        job = np.asarray(self.tasks.job)
+        out = np.full(self.tasks.num_jobs, -np.inf)
+        np.maximum.at(out, job, finish)
+        return np.where(np.isfinite(out), out, np.nan)
+
+    def job_delays(self) -> np.ndarray:
+        """float64[J] JCT delay (Eq. 2) for completed jobs, nan otherwise."""
+        return (
+            self.job_finish_times()
+            - np.asarray(self.tasks.job_submit, np.float64)
+            - np.asarray(self.tasks.job_ideal, np.float64)
+        )
+
+    def to_run_metrics(self, include_tasks: bool = True) -> RunMetrics:
+        """Materialize ``RunMetrics`` records so every event-backend consumer
+        (``summary()``, plotting, percentile helpers) works unchanged.
+
+        Record construction is a Python loop (one object per job/task) —
+        fine for parity-scale traces, but sweep-scale callers (500k+ tasks)
+        should pass ``include_tasks=False`` or read the dense arrays
+        directly (``job_delays()``, ``state.task_finish``)."""
+        m = RunMetrics(scheduler=self.scheduler, workload=self.workload_name)
+        m.inconsistencies = int(self.state.inconsistencies)
+        m.repartitions = int(self.state.repartitions)
+        m.messages = int(self.state.messages)
+        m.probes = int(self.state.probes)
+        job_finish = self.job_finish_times()
+        submit = np.asarray(self.tasks.job_submit, np.float64)
+        ideal = np.asarray(self.tasks.job_ideal, np.float64)
+        ntasks = np.asarray(self.tasks.job_ntasks)
+        for j in range(self.tasks.num_jobs):
+            m.jobs.append(
+                JobRecord(
+                    job_id=j,
+                    submit_time=float(submit[j]),
+                    ideal_jct=float(ideal[j]),
+                    num_tasks=int(ntasks[j]),
+                    finish_time=float(job_finish[j]),
+                    is_long=classify_long(float(ideal[j]), LONG_JOB_THRESHOLD),
+                )
+            )
+        if include_tasks:
+            worker_queue = self.scheduler == "sparrow"
+            t_job = np.asarray(self.tasks.job)
+            t_dur = np.asarray(self.tasks.duration, np.float64)
+            t_sub = np.asarray(self.tasks.submit, np.float64)
+            t_fin_raw = np.asarray(self.state.task_finish, np.float64)
+            # finish was recorded at launch as start + duration
+            t_start = t_fin_raw - t_dur
+            t_fin = np.where(t_fin_raw <= self.end_time, t_fin_raw, np.inf)
+            hops = 3 * self.cfg.hop
+            for i in range(self.tasks.num_tasks):
+                tr = TaskRecord(
+                    job_id=int(t_job[i]),
+                    task_index=i,
+                    duration=float(t_dur[i]),
+                    submit_time=float(t_sub[i]),
+                    start_time=float(t_start[i]) if np.isfinite(t_start[i]) else math.nan,
+                    finish_time=float(t_fin[i]) if np.isfinite(t_fin[i]) else math.nan,
+                )
+                if np.isfinite(t_start[i]):
+                    pre = max(0.0, t_start[i] - t_sub[i])
+                    tr.d_comm = min(pre, hops)
+                    wait = pre - tr.d_comm
+                    if worker_queue:
+                        tr.d_queue_worker = wait
+                    else:
+                        tr.d_queue_scheduler = wait
+                m.tasks.append(tr)
+        return m
+
+
+def simulate_workload(
+    scheduler: str,
+    workload: Workload,
+    num_workers: int,
+    *,
+    num_gms: int = 8,
+    num_lms: int = 8,
+    heartbeat_interval: float = 5.0,
+    probe_ratio: int = 2,
+    dt: float = 0.05,
+    seed: int = 0,
+    chunk: int = 256,
+    max_rounds: Optional[int] = None,
+    until: Optional[float] = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> SimxRun:
+    """Run one (scheduler, workload) simx simulation to completion.
+
+    Mirrors ``sim.simulator.run_simulation`` semantics; ``until`` caps the
+    simulated time span instead of running until all tasks finish.
+    """
+    name = scheduler.lower()
+    if name not in SCHEDULERS:
+        raise ValueError(
+            f"simx backend implements {SCHEDULERS}, not {scheduler!r}"
+        )
+    tasks = export_workload(workload)
+    if name == "megha":
+        # shave workers so the partition grid divides evenly (same as the
+        # event backend's make_scheduler)
+        per = num_workers // (num_gms * num_lms)
+        cfg = SimxConfig(
+            num_workers=per * num_gms * num_lms,
+            num_gms=num_gms,
+            num_lms=num_lms,
+            heartbeat_interval=heartbeat_interval,
+            probe_ratio=probe_ratio,
+            dt=dt,
+            seed=seed,
+        )
+        key = jax.random.PRNGKey(seed)
+        orders = simx_megha.gm_orders(key, cfg)
+        match_fn = simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret)
+        step = simx_megha.make_megha_step(cfg, tasks, orders, match_fn)
+        state = init_megha_state(cfg, tasks.num_tasks)
+    else:
+        cfg = SimxConfig(
+            num_workers=num_workers,
+            num_gms=num_gms,
+            num_lms=num_lms,
+            heartbeat_interval=heartbeat_interval,
+            probe_ratio=probe_ratio,
+            dt=dt,
+            seed=seed,
+        )
+        probes = simx_sparrow.probe_mask(jax.random.PRNGKey(seed), cfg, tasks)
+        step = simx_sparrow.make_sparrow_step(cfg, tasks, probes)
+        state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    cap = max_rounds if max_rounds is not None else estimate_rounds(cfg, tasks)
+    if until is not None:
+        cap = min(cap, int(math.ceil(until / dt)))
+    state = run_to_completion(step, state, chunk=chunk, max_rounds=cap)
+    return SimxRun(
+        scheduler=name,
+        workload_name=workload.name,
+        cfg=cfg,
+        tasks=tasks,
+        state=state,
+    )

@@ -1,0 +1,327 @@
+"""Megha transition rule for the simx round-stepped backend.
+
+One round advances the whole datacenter by ``cfg.dt`` simulated seconds:
+
+  1. **complete** — workers whose task finished inside the round window just
+     ended free up; the scheduling GM's view regains NON-borrowed workers
+     immediately (borrowed ones wait for the owner's heartbeat, §3.4).
+  2. **heartbeat** — every ``heartbeat_rounds`` rounds all LM snapshots
+     overwrite every GM view (§3.1).  Round-synchronous execution means no
+     placement is in flight at this point, so the full overwrite is exact.
+  3. **internal match** — each GM ranks the free workers of its own
+     partitions (per its GM-specific shuffled priority order, §3.3) with the
+     rank-and-select primitive and proposes its queued tasks (FIFO) onto
+     them.  Internal partitions are disjoint across GMs, so no cross-GM
+     arbitration is needed; the LM ground truth still verifies each mapping
+     (a stale view can show a worker free that another GM borrowed).
+  4. **borrow match** (``lax.cond``, only when some GM's queue exceeds its
+     internal free view) — the full §3.2 repartition pass: every GM matches
+     its remaining queue over its whole priority order (internal first,
+     then external), simultaneous claims arbitrated by a per-round rotating
+     GM priority, LM truth verifying.  Failed proposals in either phase are
+     inconsistencies: the proposing GM keeps those workers marked busy and
+     receives a piggybacked fresh snapshot of every LM that rejected it
+     (§3.4.1); losing tasks stay queued (FIFO retry next round).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.match import match_ranks_batched
+from repro.simx.state import MeghaState, SimxConfig, TaskArrays, init_megha_state
+
+MatchFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def gm_orders(key: jax.Array, cfg: SimxConfig) -> jax.Array:
+    """int32[G, W] per-GM priority permutations: own partitions (shuffled)
+    first, then external partitions (shuffled), mirroring
+    ``GlobalManager.__init__`` / ``fastpath.make_orders``."""
+    cfg.validate_megha_grid()
+    w = np.arange(cfg.num_workers)
+    part_gm = (w % cfg.workers_per_lm) // cfg.partition_size
+    rows = []
+    for g in range(cfg.num_gms):
+        k_int, k_ext = jax.random.split(jax.random.fold_in(key, g))
+        internal = jnp.asarray(w[part_gm == g], jnp.int32)
+        external = jnp.asarray(w[part_gm != g], jnp.int32)
+        rows.append(
+            jnp.concatenate(
+                [
+                    jax.random.permutation(k_int, internal),
+                    jax.random.permutation(k_ext, external),
+                ]
+            )
+        )
+    return jnp.stack(rows)
+
+
+def default_match_fn(use_pallas: bool = False, interpret: bool = True) -> MatchFn:
+    """The GM match primitive: the batched Pallas kernel on TPU, the jnp
+    reference on CPU (Pallas interpret mode is orders of magnitude slower
+    than XLA inside a scanned hot loop)."""
+    if use_pallas:
+        return partial(match_ranks_batched, interpret=interpret)
+    return ref.match_ranks_batched_ref
+
+
+def make_megha_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    orders: jax.Array,
+    match_fn: MatchFn | None = None,
+) -> Callable[[MeghaState], MeghaState]:
+    """Build the jittable one-round transition function.
+
+    Hot-loop layout notes (CPU XLA scatters are scalar loops, so the round
+    is built from gathers, a small row sort, and elementwise ops — one
+    [W]-wide scatter per phase, the task-finish write at launch):
+
+      * tasks live in a compact per-GM layout ``gm_tasks[G, Tg]`` (static
+        round-robin partition, padded with the OOB sentinel T);
+      * each GM only examines a ``C``-wide FIFO *window* starting at its
+        launched-prefix ``head`` pointer, so per-round cost is independent
+        of the trace length.  Matches are therefore capped at C per GM per
+        round; the auto window (``cfg.match_window == 0``) is
+        ``C = max(W / G, 64)``, so the G GMs together can fill the whole DC
+        in one round and the cap only binds under extreme borrow imbalance
+        (where it just delays the surplus to the next round);
+      * the common case runs entirely on [G, W/G] internal-partition
+        arrays; the [G, W]-wide borrow pass is entered via ``lax.cond``
+        only on rounds where a GM's queue outruns its internal free view;
+      * GM->worker coordinate conversion goes through precomputed inverse
+        permutations (gathers), never scatters.
+    """
+    if match_fn is None:
+        match_fn = default_match_fn()
+    cfg.validate_megha_grid()
+    G, L, W = cfg.num_gms, cfg.num_lms, cfg.num_workers
+    wpl = cfg.workers_per_lm
+    wi = W // G                                        # internal workers per GM
+    T = tasks.num_tasks
+    hb = cfg.heartbeat_rounds
+    part_gm = cfg.partition_gms()                      # int32[W]
+    g_col = jnp.arange(G, dtype=jnp.int32)[:, None]
+    l_row = jnp.arange(L, dtype=jnp.int32)[None, None, :]
+    w_row = jnp.arange(W, dtype=jnp.int32)
+    inv_orders = jnp.argsort(orders, axis=1)           # int32[G,W]
+    int_ord = orders[:, :wi]                           # int32[G,wi] own workers
+    # rows of int_ord partition [0, W): flattening gives a W-permutation
+    inv_int = jnp.argsort(int_ord.reshape(-1))         # int32[W] -> flat (g,i)
+    lm_int = int_ord // wpl                            # int32[G,wi]
+    # compact per-GM task partition (jobs round-robin over GMs)
+    task_gm = np.asarray(tasks.job) % G
+    tg = max(1, int(np.max(np.bincount(task_gm, minlength=G))))
+    C = cfg.match_window or max(W // G, 64)
+    C = min(C, tg)
+    # pad with C sentinels so the head window never slices out of bounds
+    gm_tasks_np = np.full((G, tg + C), T, np.int32)
+    for g in range(G):
+        mine = np.nonzero(task_gm == g)[0]
+        gm_tasks_np[g, : mine.size] = mine
+    gm_tasks = jnp.asarray(gm_tasks_np)                # int32[G,Tg+C]
+    # task submit times in the padded compact layout (sentinel -> inf)
+    submit_c = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])[gm_tasks]
+    win = jnp.arange(C, dtype=jnp.int32)[None, :]      # int32[1,C]
+    dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
+
+    def slice_rows(mat, starts, width):
+        return jax.vmap(
+            lambda row, s: jax.lax.dynamic_slice(row, (s,), (width,))
+        )(mat, starts)
+
+    def fifo_of(queued_w):
+        """int32[G,C]: window position of each GM's r-th queued task (C if
+        none) — sorting queued positions ahead of the C sentinels preserves
+        task-index (== FIFO) order."""
+        return jnp.sort(
+            jnp.where(queued_w, jnp.broadcast_to(win, queued_w.shape), C), axis=1
+        )
+
+    def launch_updates(t, launch_w, task_w, gm_w, task_finish, worker_finish,
+                       worker_gm, worker_borrowed):
+        """Apply one phase's launches ([W]-space masks) to the task/worker
+        state.  start = round time + client->GM + GM->LM + LM->worker hops."""
+        start = t + 3 * cfg.hop
+        lt = jnp.where(launch_w, task_w, T)
+        fin = start + dur_pad[jnp.minimum(task_w, T)]
+        task_finish = task_finish.at[lt].set(fin, mode="drop")
+        worker_finish = jnp.where(launch_w, fin, worker_finish)
+        worker_gm = jnp.where(launch_w, gm_w, worker_gm)
+        worker_borrowed = jnp.where(launch_w, part_gm != gm_w, worker_borrowed)
+        return task_finish, worker_finish, worker_gm, worker_borrowed
+
+    def piggyback(view, truth, invalid_gl):
+        """Refresh GM g's view of every LM that rejected one of its
+        proposals with that LM's fresh ground truth (§3.4.1)."""
+        refresh = jnp.repeat(invalid_gl, wpl, axis=1)             # bool[G,W]
+        return jnp.where(refresh, truth[None, :], view)
+
+    def step(s: MeghaState) -> MeghaState:
+        t = s.t
+        # -- 1. completions -------------------------------------------------
+        # a worker completes this round iff its finish time fell in the round
+        # window just ended; task_finish was already recorded at launch
+        truth = s.worker_finish <= t                   # bool[W] ground truth
+        comp = truth & (s.worker_finish > t - cfg.dt)
+        regain = ((s.worker_gm[None, :] == g_col) & (comp & ~s.worker_borrowed))
+        view = s.view | regain
+        messages = s.messages + jnp.sum(comp, dtype=jnp.int32)  # LM -> GM
+
+        # -- 2. heartbeat ---------------------------------------------------
+        do_hb = (s.rnd % hb) == (hb - 1)
+        view = jnp.where(do_hb, truth[None, :], view)
+        messages = messages + jnp.where(do_hb, G * L, 0).astype(jnp.int32)
+
+        # -- 3. internal match (FIFO windows, [G, W/G] arrays) --------------
+        wtask = slice_rows(gm_tasks, s.head, C)                   # int32[G,C]
+        wsubmit = slice_rows(submit_c, s.head, C)                 # float32[G,C]
+        fpad = jnp.concatenate([s.task_finish, jnp.float32([-jnp.inf])])
+        launched_w = ~jnp.isinf(fpad[wtask]) | (wtask >= T)       # bool[G,C]
+        queued_w = ~launched_w & (wsubmit <= t)                   # bool[G,C]
+        nq = jnp.sum(queued_w, axis=1, dtype=jnp.int32)           # int32[G]
+        fifo = fifo_of(queued_w)                                  # int32[G,C]
+        avail_int = view[g_col, int_ord]                          # bool[G,wi]
+        ranks_i = match_fn(avail_int, nq)                         # int32[G,wi]
+        sel_pos = jnp.take_along_axis(
+            fifo, jnp.clip(ranks_i, 0, C - 1), axis=1
+        )
+        sel_task_i = jnp.where(
+            ranks_i >= 0,
+            jnp.take_along_axis(wtask, jnp.clip(sel_pos, 0, C - 1), axis=1),
+            -1,
+        )                                                         # int32[G,wi]
+        proposed_i = sel_task_i >= 0
+        truth_int = truth[int_ord]                                # bool[G,wi]
+        launch_i = proposed_i & truth_int
+        invalid_i = proposed_i & ~truth_int
+        # flat (g, i) -> worker coordinates via the static inverse perm
+        launch_w = launch_i.reshape(-1)[inv_int]                  # bool[W]
+        task_w = jnp.where(launch_w, sel_task_i.reshape(-1)[inv_int], T)
+        task_finish, worker_finish, worker_gm, worker_borrowed = launch_updates(
+            t, launch_w, task_w, part_gm,
+            s.task_finish, s.worker_finish, s.worker_gm, s.worker_borrowed,
+        )
+        truth = truth & ~launch_w
+        # the proposing GM marks every proposed internal worker busy in its
+        # own view (popped from the free pool when the batch was built)
+        proposed_own = proposed_i.reshape(-1)[inv_int]            # bool[W]
+        view = view & ~(proposed_own[None, :] & (part_gm[None, :] == g_col))
+        inconsistencies = s.inconsistencies + jnp.sum(invalid_i, dtype=jnp.int32)
+        inval_gl = (invalid_i[:, :, None] & (lm_int[:, :, None] == l_row)).any(axis=1)
+        view = piggyback(view, truth, inval_gl)
+        batch_gl = (proposed_i[:, :, None] & (lm_int[:, :, None] == l_row)).any(axis=1)
+        messages = messages + 2 * jnp.sum(batch_gl, dtype=jnp.int32)
+
+        # -- 4. borrow match (full [G, W] pass, only when queues outrun the
+        #       internal views) --------------------------------------------
+        placed_i = jnp.sum(proposed_i, axis=1, dtype=jnp.int32)
+        need_borrow = jnp.any(nq > placed_i)
+
+        def borrow(args):
+            (view, truth, task_finish, worker_finish, worker_gm,
+             worker_borrowed, inconsistencies, repartitions, messages) = args
+            fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+            launched2 = ~jnp.isinf(fpad2[wtask]) | (wtask >= T)
+            queued2 = ~launched2 & (wsubmit <= t)
+            nq2 = jnp.sum(queued2, axis=1, dtype=jnp.int32)
+            fifo2 = fifo_of(queued2)
+            avail_ord = jnp.take_along_axis(view, orders, axis=1)  # bool[G,W]
+            ranks = match_fn(avail_ord, nq2)                       # int32[G,W]
+            sel_pos2 = jnp.take_along_axis(
+                fifo2, jnp.clip(ranks, 0, C - 1), axis=1
+            )
+            sel_task = jnp.where(
+                ranks >= 0,
+                jnp.take_along_axis(wtask, jnp.clip(sel_pos2, 0, C - 1), axis=1),
+                -1,
+            )
+            # ordered positions -> worker coordinates (inverse gather)
+            prop = jnp.take_along_axis(sel_task, inv_orders, axis=1)
+            proposed = prop >= 0
+            repartitions = repartitions + jnp.sum(
+                proposed & (part_gm[None, :] != g_col), dtype=jnp.int32
+            )
+            # simultaneous claims: per-round rotating GM priority, one
+            # min-reduction over (priority, gm) packed into a single int
+            pri = (g_col + s.rnd) % G
+            enc = jnp.where(
+                proposed, jnp.broadcast_to(pri * G, (G, W)) + g_col, G * G
+            )
+            win_enc = jnp.min(enc, axis=0)                         # int32[W]
+            any_prop = win_enc < G * G
+            win_g = jnp.where(any_prop, win_enc % G, 0)
+            launch = any_prop & truth                              # bool[W]
+            win_task = jnp.where(launch, prop[win_g, w_row], T)
+            task_finish, worker_finish, worker_gm, worker_borrowed = (
+                launch_updates(
+                    t, launch, win_task, win_g,
+                    task_finish, worker_finish, worker_gm, worker_borrowed,
+                )
+            )
+            truth = truth & ~launch
+            view = view & ~proposed
+            launched_by_g = launch[None, :] & (g_col == win_g[None, :])
+            invalid = proposed & ~launched_by_g                    # bool[G,W]
+            inconsistencies = inconsistencies + jnp.sum(invalid, dtype=jnp.int32)
+            view = piggyback(view, truth, invalid.reshape(G, L, wpl).any(axis=2))
+            batch2 = proposed.reshape(G, L, wpl).any(axis=2)
+            messages = messages + 2 * jnp.sum(batch2, dtype=jnp.int32)
+            return (view, truth, task_finish, worker_finish, worker_gm,
+                    worker_borrowed, inconsistencies, repartitions, messages)
+
+        carry = (view, truth, task_finish, worker_finish, worker_gm,
+                 worker_borrowed, inconsistencies, s.repartitions, messages)
+        (view, truth, task_finish, worker_finish, worker_gm, worker_borrowed,
+         inconsistencies, repartitions, messages) = jax.lax.cond(
+            need_borrow, borrow, lambda a: a, carry
+        )
+
+        # -- 5. advance each GM's FIFO head past its launched prefix --------
+        fpad3 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+        launched3 = ~jnp.isinf(fpad3[wtask]) | (wtask >= T)        # bool[G,C]
+        lead = jnp.sum(
+            jnp.cumprod(launched3.astype(jnp.int32), axis=1), axis=1
+        )                                                          # int32[G]
+        head = jnp.minimum(s.head + lead, tg)
+
+        return s.replace(
+            t=t + cfg.dt,
+            rnd=s.rnd + 1,
+            task_finish=task_finish,
+            head=head,
+            worker_finish=worker_finish,
+            worker_gm=worker_gm,
+            worker_borrowed=worker_borrowed,
+            view=view,
+            inconsistencies=inconsistencies,
+            repartitions=repartitions,
+            messages=messages,
+        )
+
+    return step
+
+
+def simulate_fixed(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    seed: jax.Array | int,
+    num_rounds: int,
+    match_fn: MatchFn | None = None,
+) -> MeghaState:
+    """Run exactly ``num_rounds`` rounds from a fresh DC — a pure function of
+    ``seed``, so an entire sweep grid runs as ``jax.vmap(simulate_fixed, ...)``
+    in one compiled program."""
+    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+    orders = gm_orders(key, cfg)
+    step = make_megha_step(cfg, tasks, orders, match_fn)
+    state = init_megha_state(cfg, tasks.num_tasks)
+    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
+    return state

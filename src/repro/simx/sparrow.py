@@ -1,0 +1,151 @@
+"""Sparrow transition rule for the simx round-stepped backend.
+
+Vectorized batch sampling + late binding (§2.2.2).  When a job of n tasks
+arrives it probes ``d * n`` random workers, leaving a *reservation* at each
+(the probe set is materialized once as a ``bool[J, W]`` mask).  Tasks are
+NOT bound to workers: each round, every idle worker serves the
+earliest-submitted job holding a reservation on it that still has pending
+tasks (worker reservation queues are FIFO in probe arrival order == job
+submit order), and late binding hands it that job's next pending task.
+Reservations of fully launched jobs act cancelled — the ``pending > 0``
+mask skips them, like the event backend's cancel RPC.
+
+Approximations vs. the event backend (beyond round quantization, see
+``engine``): probes are sampled with replacement rather than distinct, and
+a worker whose chosen job runs out of pending tasks this round (more
+claimants than tasks) retries next round instead of popping the next
+reservation within the same 0.5 ms RPC.
+
+Memory note: the probe mask and the per-round serve ranking are dense
+``[J, W]`` — fine for sweep-sized traces (200 jobs x 50k workers = 10 MB),
+but quadratic-ish workloads (many thousands of jobs on huge DCs) should
+batch jobs or stay on the event backend.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.simx.state import SimxConfig, SparrowState, TaskArrays, init_sparrow_state
+
+
+def probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.Array:
+    """bool[J, W] — the min(d * n_tasks, W) DISTINCT workers each job probes.
+
+    Distinct sampling (the event backend uses ``rng.sample``) matters: with
+    replacement, d*n draws collide and shrink the effective reservation set.
+    Each row draws uniform scores and keeps the k_j smallest — an implicit
+    uniform k_j-subset."""
+    J = tasks.num_jobs
+    W = cfg.num_workers
+    k = jnp.minimum(cfg.probe_ratio * tasks.job_ntasks, W)          # int32[J]
+    scores = jax.random.uniform(key, (J, W))
+    kth = jnp.take_along_axis(
+        jnp.sort(scores, axis=1), jnp.maximum(k - 1, 0)[:, None], axis=1
+    )
+    return (scores <= kth) & (k > 0)[:, None]
+
+
+def make_sparrow_step(
+    cfg: SimxConfig, tasks: TaskArrays, probes: jax.Array
+) -> Callable[[SparrowState], SparrowState]:
+    """Build the jittable one-round transition function."""
+    W = cfg.num_workers
+    T = tasks.num_tasks
+    J = tasks.num_jobs
+    d = cfg.probe_ratio
+    t_row = jnp.arange(T, dtype=jnp.int32)
+    j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
+    # tasks are exported contiguously per job: cumulative task count before
+    # each job gives the within-job pending rank via one global cumsum
+    job_start = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(tasks.job_ntasks, dtype=jnp.int32)[:-1]]
+    )
+
+    def step(s: SparrowState) -> SparrowState:
+        t = s.t
+        # completions are implicit: a worker is idle iff worker_finish <= t,
+        # and task_finish was recorded at launch
+
+        # -- 1. new arrivals place their probes -----------------------------
+        job_seen = tasks.job_submit <= t                            # bool[J]
+        newly = job_seen & ~s.probed
+        # distinct sampling caps a job's probes at W (matches probe_mask and
+        # the event backend's rng.sample of min(d*n, W) workers)
+        n_probes = jnp.sum(
+            jnp.where(newly, jnp.minimum(d * tasks.job_ntasks, W), 0),
+            dtype=jnp.int32,
+        )
+        probes_ctr = s.probes + n_probes
+        messages = s.messages + n_probes
+
+        # -- 2. late binding: idle workers serve reservations ---------------
+        pend_task = jnp.isinf(s.task_finish) & (tasks.submit <= t)  # bool[T]
+        pending = (
+            jnp.zeros(J, jnp.int32)
+            .at[tasks.job]
+            .add(pend_task.astype(jnp.int32))
+        )                                                           # int32[J]
+        active = probes & (pending > 0)[:, None] & job_seen[:, None]  # [J,W]
+        # FIFO reservation queue: earliest job (lowest index) wins the worker
+        job_pick = jnp.min(jnp.where(active, j_col, J), axis=0)     # int32[W]
+        idle = s.worker_finish <= t
+        claim = idle & (job_pick < J)                               # bool[W]
+        # cap claimants at the job's pending count, worker-index order
+        claim_j = claim[None, :] & (job_pick[None, :] == j_col)     # bool[J,W]
+        serve_rank = jnp.cumsum(claim_j, axis=1, dtype=jnp.int32) - 1
+        serve = claim_j & (serve_rank < pending[:, None])           # bool[J,W]
+        # the k-th serving worker of job j gets j's k-th pending task;
+        # within-job pending rank = global cumsum minus the job's base count
+        c = jnp.cumsum(pend_task, dtype=jnp.int32)
+        base = jnp.where(job_start > 0, c[jnp.maximum(job_start - 1, 0)], 0)
+        prank = c - 1 - base[tasks.job]                             # int32[T]
+        slot = jnp.full((J, W), T, jnp.int32).at[
+            tasks.job, jnp.where(pend_task & (prank < W), prank, W)
+        ].set(t_row, mode="drop")                                   # int32[J,W]
+        srank = jnp.where(serve, serve_rank, W)
+        task_pick = jnp.min(
+            jnp.where(
+                serve,
+                jnp.take_along_axis(slot, jnp.clip(srank, 0, W - 1), axis=1),
+                T,
+            ),
+            axis=0,
+        )                                                           # int32[W]
+        launch = jnp.any(serve, axis=0)                             # bool[W]
+        lt = jnp.where(launch, task_pick, T)
+        # client->scheduler hop + worker->scheduler get-task RPC round trip
+        start = t + 3 * cfg.hop
+        dur = tasks.duration[jnp.clip(task_pick, 0, T - 1)]
+        task_finish = s.task_finish.at[lt].set(start + dur, mode="drop")
+        worker_finish = jnp.where(launch, start + dur, s.worker_finish)
+        messages = messages + 2 * jnp.sum(launch, dtype=jnp.int32)  # RPC + reply
+
+        return s.replace(
+            t=t + cfg.dt,
+            rnd=s.rnd + 1,
+            task_finish=task_finish,
+            worker_finish=worker_finish,
+            probed=s.probed | newly,
+            probes=probes_ctr,
+            messages=messages,
+        )
+
+    return step
+
+
+def simulate_fixed(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    seed: jax.Array | int,
+    num_rounds: int,
+) -> SparrowState:
+    """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed)."""
+    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+    step = make_sparrow_step(cfg, tasks, probe_mask(key, cfg, tasks))
+    state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
+    return state

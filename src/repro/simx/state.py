@@ -1,0 +1,204 @@
+"""Dense-array datacenter state for the simx backend.
+
+Everything the round-stepped engine touches is a fixed-shape array so the
+whole simulation jits, scans, and vmaps:
+
+  * ``TaskArrays``  — the workload exported to flat per-task/per-job arrays
+                      (tasks sorted by job submission time, so task index
+                      order == FIFO arrival order).
+  * ``SimxConfig``  — static (python-level) simulation parameters shared by
+                      the megha and sparrow transition rules.
+  * ``MeghaState`` / ``SparrowState`` — the scan carries: dataclass-of-arrays
+    pytrees holding ground truth, stale views, per-worker run state, per-task
+    lifecycle state, and the metric accumulators mirroring ``RunMetrics``
+    (inconsistencies, repartitions, messages, probes).
+
+Task lifecycle is encoded implicitly by ONE float array: both backends
+record ``task_finish = start + duration`` at LAUNCH, since the completion
+time is known then (start is recovered as ``finish - duration``), and
+completions only matter for freeing workers, detected elementwise by
+``worker_finish`` crossing the round time — one scatter per round total:
+
+  pending  : ``task_finish == inf`` (queued once ``submit <= t``)
+  running  : launched, ``task_finish > t``
+  done     : ``task_finish <= t``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.workload.traces import Workload
+
+#: Sentinel for "not yet" times.
+INF = jnp.float32(jnp.inf)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TaskArrays:
+    """The workload as flat arrays (T tasks over J jobs, no padding)."""
+
+    job: jax.Array          # int32[T] — job position in submit order
+    duration: jax.Array     # float32[T]
+    submit: jax.Array       # float32[T] — the job's submission time
+    job_submit: jax.Array   # float32[J]
+    job_ideal: jax.Array    # float32[J] — IdealJCT = max task duration
+    job_ntasks: jax.Array   # int32[J]
+
+    @property
+    def num_tasks(self) -> int:
+        return self.job.shape[0]
+
+    @property
+    def num_jobs(self) -> int:
+        return self.job_submit.shape[0]
+
+
+def export_workload(wl: Workload) -> TaskArrays:
+    """Flatten a ``Workload`` into ``TaskArrays`` (jobs in submit order)."""
+    jobs = wl.sorted_jobs()
+    n_tasks = sum(j.num_tasks for j in jobs)
+    task_job = np.empty(n_tasks, np.int32)
+    task_dur = np.empty(n_tasks, np.float32)
+    task_sub = np.empty(n_tasks, np.float32)
+    job_sub = np.empty(len(jobs), np.float32)
+    job_ideal = np.empty(len(jobs), np.float32)
+    job_nt = np.empty(len(jobs), np.int32)
+    k = 0
+    for p, j in enumerate(jobs):
+        c = j.num_tasks
+        task_job[k : k + c] = p
+        task_dur[k : k + c] = np.asarray(j.durations, np.float32)
+        task_sub[k : k + c] = j.submit_time
+        job_sub[p] = j.submit_time
+        job_ideal[p] = j.ideal_jct
+        job_nt[p] = c
+        k += c
+    return TaskArrays(
+        job=jnp.asarray(task_job),
+        duration=jnp.asarray(task_dur),
+        submit=jnp.asarray(task_sub),
+        job_submit=jnp.asarray(job_sub),
+        job_ideal=jnp.asarray(job_ideal),
+        job_ntasks=jnp.asarray(job_nt),
+    )
+
+
+@dataclass(frozen=True)
+class SimxConfig:
+    """Static simulation parameters (hashable: safe as a jit static arg)."""
+
+    num_workers: int
+    num_gms: int = 8
+    num_lms: int = 8
+    dt: float = 0.05                 # round length (seconds of simulated time)
+    heartbeat_interval: float = 5.0  # §4.1
+    hop: float = 0.0005              # §4.1 constant network delay
+    probe_ratio: int = 2             # sparrow's d
+    match_window: int = 0            # per-GM FIFO window; 0 = auto (see megha)
+    seed: int = 0
+
+    def validate_megha_grid(self) -> None:
+        """Megha needs the GM x LM partition grid to divide evenly; sparrow
+        has no partition grid and accepts any worker count."""
+        if self.num_workers % (self.num_gms * self.num_lms):
+            raise ValueError("num_workers must divide into GM x LM partitions")
+
+    @property
+    def workers_per_lm(self) -> int:
+        return self.num_workers // self.num_lms
+
+    @property
+    def partition_size(self) -> int:
+        return self.workers_per_lm // self.num_gms
+
+    @property
+    def heartbeat_rounds(self) -> int:
+        return max(1, int(round(self.heartbeat_interval / self.dt)))
+
+    def partition_gms(self) -> jax.Array:
+        """int32[W] — which GM owns each worker's partition."""
+        w = np.arange(self.num_workers)
+        return jnp.asarray(
+            (w % self.workers_per_lm) // self.partition_size, jnp.int32
+        )
+
+
+def _common_fields(cfg: SimxConfig, num_tasks: int) -> dict:
+    w = cfg.num_workers
+    return dict(
+        t=jnp.float32(0.0),
+        rnd=jnp.int32(0),
+        task_finish=jnp.full(num_tasks, jnp.inf, jnp.float32),
+        # a worker is free iff worker_finish <= t; -inf = never ran anything
+        worker_finish=jnp.full(w, -jnp.inf, jnp.float32),
+        inconsistencies=jnp.int32(0),
+        repartitions=jnp.int32(0),
+        messages=jnp.int32(0),
+        probes=jnp.int32(0),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MeghaState:
+    """Scan carry for the megha transition rule."""
+
+    t: jax.Array               # float32[] — simulated time at round start
+    rnd: jax.Array             # int32[]
+    task_finish: jax.Array     # float32[T] — inf until launched (= start+dur)
+    head: jax.Array            # int32[G] — launched prefix of each GM's FIFO
+    worker_finish: jax.Array   # float32[W] — free iff <= t
+    worker_gm: jax.Array       # int32[W] — GM that scheduled the last task
+    worker_borrowed: jax.Array  # bool[W] — last task ran on a borrowed worker
+    view: jax.Array            # bool[G, W] — per-GM stale availability view
+    inconsistencies: jax.Array  # int32[]
+    repartitions: jax.Array    # int32[]
+    messages: jax.Array        # int32[]
+    probes: jax.Array          # int32[]
+
+    def replace(self, **kw) -> "MeghaState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_megha_state(cfg: SimxConfig, num_tasks: int) -> MeghaState:
+    w = cfg.num_workers
+    return MeghaState(
+        head=jnp.zeros(cfg.num_gms, jnp.int32),
+        worker_gm=jnp.zeros(w, jnp.int32),
+        worker_borrowed=jnp.zeros(w, jnp.bool_),
+        view=jnp.ones((cfg.num_gms, w), jnp.bool_),
+        **_common_fields(cfg, num_tasks),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class SparrowState:
+    """Scan carry for the sparrow transition rule."""
+
+    t: jax.Array
+    rnd: jax.Array
+    task_finish: jax.Array
+    worker_finish: jax.Array
+    probed: jax.Array     # bool[J] — job's batch-sampling probes placed
+    inconsistencies: jax.Array
+    repartitions: jax.Array
+    messages: jax.Array
+    probes: jax.Array
+
+    def replace(self, **kw) -> "SparrowState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_sparrow_state(cfg: SimxConfig, num_tasks: int, num_jobs: int) -> SparrowState:
+    return SparrowState(
+        probed=jnp.zeros(num_jobs, jnp.bool_),
+        **_common_fields(cfg, num_tasks),
+    )
