@@ -1,18 +1,28 @@
 """Events vs. simx backend throughput: tasks/sec per sweep point.
 
-The headline number for the simx tentpole: scheduling throughput
-(tasks simulated per wall-clock second) of the pure-Python event loop vs.
-the compiled round-stepped backend on the same load-0.8 synthetic trace at
-1k / 4k / 16k workers.  The trace holds the arrival span fixed (~12 s of
-simulated time), so the task count scales with DC size exactly like a
-Fig. 2 sweep point: events cost scales with the task count, simx with the
-round count (span / dt) — the bigger the DC, the wider the gap.
+Two sections:
 
-simx rows are timed warm (the compiled program is the artifact a sweep
-reuses across its whole grid); the one-off compile wall-clock is reported
-alongside.  Two round lengths are reported: dt=0.05 (the engine default,
-5% of the 1 s task duration) and dt=0.1 (coarser quantization, ~2x the
-throughput — fine for relative sweeps).
+1. **Point ladder** (megha) — scheduling throughput (tasks simulated per
+   wall-clock second) of the pure-Python event loop vs. the compiled
+   round-stepped backend on the same load-0.8 synthetic trace at
+   1k / 4k / 16k (``--full``: + 50k) workers.  The trace holds the arrival
+   span fixed (~12 s of simulated time), so the task count scales with DC
+   size exactly like a Fig. 2 sweep point: events cost scales with the
+   task count, simx with the round count (span / dt) — the bigger the DC,
+   the wider the gap.  simx rows are timed warm (the compiled program is
+   the artifact a sweep reuses across its whole grid); the one-off compile
+   wall-clock is reported alongside.  Two round lengths are reported:
+   dt=0.05 (the engine default, 5% of the 1 s task duration) and dt=0.1
+   (coarser quantization, ~2x the throughput — fine for relative sweeps).
+
+2. **Fig. 2 grid** (all four schedulers) — the ``repro.simx.sweep``
+   driver compiles a whole (seed x load) grid into ONE vmapped program per
+   scheduler and reports aggregate tasks/sec over the grid plus the
+   highest-load p50 job delay.  Default is a small CI-sized grid;
+   ``--full`` runs the paper-scale grid — 50k workers, jobs of 1000
+   one-second tasks (Table 1's synthetic trace) — and takes hours on CPU
+   (see docs/fig2_sweep.md for expected runtimes and how to read the
+   output against the paper's plots).
 """
 
 from __future__ import annotations
@@ -20,10 +30,12 @@ from __future__ import annotations
 import time
 
 import jax
+import numpy as np
 
 from repro.sim.simulator import run_simulation
 from repro.simx import engine as sxe
 from repro.simx import megha as sxm
+from repro.simx import sweep as sxs
 from repro.simx.state import SimxConfig, export_workload, init_megha_state
 from repro.workload.synth import synthetic_trace
 
@@ -32,6 +44,16 @@ DC_SIZES_FULL = (1024, 4096, 16384, 50_000)
 SPAN = 12.0      # seconds of simulated arrivals per sweep point
 TASKS_PER_JOB = 128
 LOAD = 0.8
+
+#: (seed x load) grid shapes for section 2.
+SWEEP = dict(
+    loads=(0.4, 0.8), num_seeds=2, num_workers=1024, num_jobs=32,
+    tasks_per_job=128, dt=0.05,
+)
+SWEEP_FULL = dict(
+    loads=(0.2, 0.5, 0.8), num_seeds=2, num_workers=50_000, num_jobs=480,
+    tasks_per_job=1000, dt=0.05,
+)
 
 
 def _trace(workers: int):
@@ -65,6 +87,28 @@ def _simx_point(wl, workers: int, dt: float) -> dict:
     return {"wall": wall, "compile": compile_wall, "done": done}
 
 
+def _sweep_rows(full: bool) -> list[str]:
+    """Section 2: the vmap-compiled Fig. 2 grid, one row per scheduler."""
+    spec = SWEEP_FULL if full else SWEEP
+    rows = []
+    grid_pts = len(spec["loads"]) * spec["num_seeds"]
+    for sched in sxe.SCHEDULERS:
+        t0 = time.time()
+        r = sxs.fig2_sweep(sched, **spec)
+        wall = time.time() - t0
+        total = int(r["num_tasks"]) * grid_pts
+        done = int(np.sum(r["tasks_done"]))
+        p50_top = float(np.mean(r["p50"][-1]))  # highest load, seed-averaged
+        rows.append(
+            f"simx_fig2_{sched},{wall * 1e6 / max(total, 1):.2f},"
+            f"tasks_per_sec={total / wall:.0f};wall={wall:.2f}s;"
+            f"grid={len(spec['loads'])}x{spec['num_seeds']};"
+            f"rounds={int(r['num_rounds'])};done={done}/{total};"
+            f"p50_load{spec['loads'][-1]:g}={p50_top:.3f}s"
+        )
+    return rows
+
+
 def run(full: bool = False) -> list[str]:
     rows = []
     for workers in DC_SIZES_FULL if full else DC_SIZES:
@@ -89,6 +133,7 @@ def run(full: bool = False) -> list[str]:
                 f"compile={r['compile']:.2f}s;done={r['done']}/{n_tasks};"
                 f"speedup={tps / ev_tps:.1f}x"
             )
+    rows.extend(_sweep_rows(full))
     return rows
 
 

@@ -32,6 +32,14 @@ from repro.core.metrics import RunMetrics
 from repro.workload.traces import Job
 
 
+def grid_workers(num_workers: int, num_gms: int, num_lms: int) -> int:
+    """Shave the worker count so the GM x LM partition grid divides evenly
+    — the one rule shared by every Megha construction site (event backend,
+    simx backend, sweep driver)."""
+    per = num_workers // (num_gms * num_lms)
+    return per * num_gms * num_lms
+
+
 @dataclass
 class MeghaConfig:
     num_workers: int

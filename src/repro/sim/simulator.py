@@ -7,7 +7,9 @@ Two interchangeable backends behind one entry point:
     injection hooks.
   * ``backend="simx"``   — the vectorized JAX backend (``repro.simx``):
     round-synchronous dense-array simulation that jits/vmaps for
-    datacenter-scale sweeps (megha + sparrow).
+    datacenter-scale sweeps; covers the full scheduler matrix (megha,
+    sparrow, eagle, pigeon), with ``repro.simx.sweep`` compiling a whole
+    (seed x load) Fig. 2 grid into one program.
 """
 
 from __future__ import annotations
@@ -24,7 +26,7 @@ from repro.core.baselines import (
     SparrowConfig,
 )
 from repro.core.events import EventLoop
-from repro.core.megha import Megha, MeghaConfig
+from repro.core.megha import Megha, MeghaConfig, grid_workers
 from repro.core.metrics import RunMetrics
 from repro.workload.traces import Workload
 
@@ -40,10 +42,11 @@ def make_scheduler(
     if name == "megha":
         gms = kwargs.pop("num_gms", 8)
         lms = kwargs.pop("num_lms", 8)
-        # shave workers so the partition grid divides evenly
-        per = num_workers // (gms * lms)
         cfg = MeghaConfig(
-            num_workers=per * gms * lms, num_gms=gms, num_lms=lms, **kwargs
+            num_workers=grid_workers(num_workers, gms, lms),
+            num_gms=gms,
+            num_lms=lms,
+            **kwargs,
         )
         return Megha(loop, metrics, cfg)
     if name == "sparrow":
@@ -69,8 +72,11 @@ def run_simulation(
 
     ``hooks`` may inject fault events (GM/worker failures) after setup
     (events backend only).  ``backend="simx"`` routes to the vectorized JAX
-    backend; scheduler kwargs (num_gms, num_lms, heartbeat_interval, seed,
-    probe_ratio) carry over, plus simx-specific ones (dt, chunk, use_pallas).
+    backend for any of megha/sparrow/eagle/pigeon; scheduler kwargs
+    (num_gms, num_lms, heartbeat_interval, seed, probe_ratio,
+    long_threshold, short_partition_fraction, num_distributors, group_size,
+    reserved_per_group, weight) carry over, plus simx-specific ones
+    (dt, chunk, use_pallas).
     """
     if backend == "simx":
         if hooks is not None:

@@ -1,10 +1,11 @@
 """simx: vectorized, JAX-compiled simulation backend for datacenter sweeps.
 
 A second simulation backend beside the event-driven one (``repro.core``):
-Megha and the Sparrow baseline reformulated as fixed-timestep synchronous
-rounds over dense arrays, advanced under ``jax.lax.scan`` and ``vmap``-able
-over seeds/configs.  Select it via
-``run_simulation(..., backend="simx")``.
+the full Fig. 2 scheduler matrix — Megha and the Sparrow, Eagle, and
+Pigeon baselines — reformulated as fixed-timestep synchronous rounds over
+dense arrays, advanced under ``jax.lax.scan`` and ``vmap``-able over
+seeds/loads (``repro.simx.sweep`` compiles a whole (seed x load) grid into
+one program).  Select it via ``run_simulation(..., backend="simx")``.
 """
 
 from repro.simx.engine import (
@@ -16,27 +17,39 @@ from repro.simx.engine import (
     simulate_workload,
 )
 from repro.simx.state import (
+    EagleState,
     MeghaState,
+    PigeonState,
     SimxConfig,
     SparrowState,
     TaskArrays,
     export_workload,
+    init_eagle_state,
     init_megha_state,
+    init_pigeon_state,
     init_sparrow_state,
 )
+from repro.simx.sweep import fig2_sweep, point_summary, sweep_grid
 
 __all__ = [
     "SCHEDULERS",
     "SimxRun",
     "SimxConfig",
     "TaskArrays",
+    "EagleState",
     "MeghaState",
+    "PigeonState",
     "SparrowState",
     "estimate_rounds",
     "export_workload",
+    "fig2_sweep",
+    "init_eagle_state",
     "init_megha_state",
+    "init_pigeon_state",
     "init_sparrow_state",
+    "point_summary",
     "run_to_completion",
     "scan_rounds",
     "simulate_workload",
+    "sweep_grid",
 ]

@@ -1,0 +1,241 @@
+"""Eagle transition rule for the simx round-stepped backend.
+
+Hybrid scheduling with Succinct State Sharing (SSS) and sticky batch
+probing (paper §2.2.3), reformulated over dense arrays:
+
+  * **Long path** — jobs with ``estimated >= long_threshold`` feed one
+    central FIFO over the *long partition* (workers ``[R, W)`` where
+    ``R = cfg.short_reserved``).  Each round the central scheduler matches
+    its queued window onto free long-partition workers (lowest index first,
+    like the event backend's ``min(free)``) with the rank-and-select
+    primitive — the same kernel megha's GM match uses, as a 1-row batch.
+  * **Short path** — Sparrow-style batch sampling with late binding over
+    ALL workers, refined by SSS at probe time: a probe landing on a worker
+    currently running a long task is rejected and re-routed once to a
+    random worker (standing in for "a node clear in the returned SS
+    bit-vector"), and, if rejected again, to the short partition — which
+    never runs long tasks, so the second re-route always sticks.
+  * **Sticky batch draining** — a worker finishing a task of job ``j``
+    immediately pulls ``j``'s next unlaunched task (no new probe, no hop),
+    covering both the short sticky-probing rule and the central
+    scheduler's same-job preference for long jobs.
+
+Approximations vs. the event backend (beyond round quantization, see
+``engine``): probe rejection is evaluated once, at the arrival round,
+against the ground-truth set of long-running workers (the event backend
+re-sends against a possibly stale SS adopted from the last rejection);
+re-routed probes pick targets by a per-job random rotation rather than a
+fresh uniform draw; and the central scheduler launches only onto workers
+that are *actually* free, so a long task waits in the central queue
+instead of head-of-line blocking behind a short task already running on
+its assigned worker.
+
+Memory note: like sparrow, the reservation mask and the per-round late
+binding are dense ``[J, W]`` — fine for sweep-sized traces, but many
+thousands of jobs on huge DCs should batch jobs or stay on the event
+backend.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.simx.megha import MatchFn, default_match_fn
+from repro.simx.sparrow import late_bind, probe_mask
+from repro.simx.state import EagleState, SimxConfig, TaskArrays, init_eagle_state
+
+
+def eagle_probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.Array:
+    """bool[J, W] — each *short* job's min(d * n_tasks, W) distinct initial
+    probe targets (uniform over the whole DC, ``sparrow.probe_mask``);
+    long-job rows are empty (long jobs go to the central scheduler)."""
+    short = tasks.job_est < cfg.long_threshold
+    return probe_mask(key, cfg, tasks) & short[:, None]
+
+
+def make_eagle_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    key: jax.Array,
+    match_fn: MatchFn | None = None,
+) -> Callable[[EagleState], EagleState]:
+    """Build the jittable one-round transition function.
+
+    Round order: completions (implicit) -> probe placement with SSS
+    re-routing for newly arrived short jobs -> sticky serve (completed
+    workers continue their previous job) -> late binding (idle workers
+    serve the earliest live reservation) -> central long match -> advance
+    the central FIFO head.
+    """
+    if match_fn is None:
+        match_fn = default_match_fn()
+    W = cfg.num_workers
+    T = tasks.num_tasks
+    J = tasks.num_jobs
+    R = cfg.short_reserved
+    k1, k2, k3 = jax.random.split(key, 3)
+    base_mask = eagle_probe_mask(k1, cfg, tasks)                # bool[J,W]
+    # per-job re-route rotations: stage 1 anywhere, stage 2 short partition
+    off1 = jax.random.randint(k2, (J,), 0, W, jnp.int32)
+    off2 = jax.random.randint(k3, (J,), 0, R, jnp.int32)
+    short_job = tasks.job_est < cfg.long_threshold              # bool[J]
+    kvec = jnp.where(
+        short_job, jnp.minimum(cfg.probe_ratio * tasks.job_ntasks, W), 0
+    )                                                           # int32[J]
+    long_task = jnp.concatenate(
+        [~short_job[tasks.job], jnp.zeros(1, jnp.bool_)]
+    )                                                           # bool[T+1]
+    job_pad = jnp.concatenate([tasks.job, jnp.int32([J])])      # int32[T+1]
+    dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
+    w_row = jnp.arange(W, dtype=jnp.int32)
+    j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
+    job_start = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(tasks.job_ntasks, dtype=jnp.int32)[:-1]]
+    )
+    # central FIFO: long task ids in submit (== task id) order, + CL sentinels
+    long_ids = np.nonzero(np.asarray(tasks.job_est)[np.asarray(tasks.job)] >= cfg.long_threshold)[0]
+    NL = int(long_ids.size)
+    CL = min(max(NL, 1), max(W - R, 64))
+    long_fifo = jnp.asarray(
+        np.concatenate([long_ids, np.full(CL, T)]).astype(np.int32)
+    )
+    submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
+    cl_row = jnp.arange(CL, dtype=jnp.int32)
+
+    def apply_launch(launch, task_pick, start, task_finish, worker_finish, worker_task):
+        lt = jnp.where(launch, task_pick, T)
+        fin = start + dur_pad[jnp.minimum(task_pick, T)]
+        task_finish = task_finish.at[lt].set(fin, mode="drop")
+        worker_finish = jnp.where(launch, fin, worker_finish)
+        worker_task = jnp.where(launch, task_pick, worker_task)
+        return task_finish, worker_finish, worker_task
+
+    def step(s: EagleState) -> EagleState:
+        t = s.t
+        # -- 0. ground truth (completions are implicit) ---------------------
+        long_here = (s.worker_finish > t) & long_task[s.worker_task]  # bool[W]
+        comp = (s.worker_finish <= t) & (s.worker_finish > t - cfg.dt)
+
+        # -- 1. newly arrived short jobs place probes, SSS re-routing -------
+        newly = (tasks.job_submit <= t) & ~s.probed & short_job
+        bm = base_mask & newly[:, None]
+        if NL:
+            rej0 = bm & long_here[None, :]
+            moved1 = jnp.take_along_axis(
+                rej0, (w_row[None, :] - off1[:, None]) % W, axis=1
+            )
+            rej1 = moved1 & long_here[None, :]
+            tgt2 = (w_row[None, :] + off2[:, None]) % R         # int32[J,W]
+            land2 = (
+                jnp.zeros((J, W), jnp.bool_)
+                .at[jnp.broadcast_to(j_col, (J, W)), tgt2]
+                .max(rej1)
+            )
+            newrow = (bm & ~long_here[None, :]) | (moved1 & ~long_here[None, :]) | land2
+            n_rej0 = jnp.sum(rej0, dtype=jnp.int32)
+            n_rej1 = jnp.sum(rej1, dtype=jnp.int32)
+        else:  # no long jobs in the trace: SSS machinery compiles out
+            newrow = bm
+            n_rej0 = n_rej1 = jnp.int32(0)
+        reserv = s.reserv | newrow
+        n_init = jnp.sum(jnp.where(newly, kvec, 0), dtype=jnp.int32)
+        probes = s.probes + n_init + n_rej0 + n_rej1
+        messages = s.messages + n_init + 2 * (n_rej0 + n_rej1)  # reject + resend
+
+        # -- 2. sticky batch draining: completed workers keep their job -----
+        pend_task = jnp.isinf(s.task_finish) & (tasks.submit <= t)
+        pending = (
+            jnp.zeros(J, jnp.int32).at[tasks.job].add(pend_task.astype(jnp.int32))
+        )
+        prev_job = job_pad[s.worker_task]                       # int32[W], J=none
+        pend_prev = jnp.concatenate([pending, jnp.zeros(1, jnp.int32)])[prev_job]
+        sticky_pick = jnp.where(comp & (pend_prev > 0), prev_job, J)
+        launch1, task1 = late_bind(sticky_pick, pend_task, tasks.job, job_start)
+        # the worker already holds the job's spec: no extra hops
+        task_finish, worker_finish, worker_task = apply_launch(
+            launch1, task1, t, s.task_finish, s.worker_finish, s.worker_task
+        )
+
+        # -- 3. late binding: idle workers serve live reservations ----------
+        pend_task = jnp.isinf(task_finish) & (tasks.submit <= t)
+        pending = (
+            jnp.zeros(J, jnp.int32).at[tasks.job].add(pend_task.astype(jnp.int32))
+        )
+        idle = worker_finish <= t
+        active = reserv & (pending > 0)[:, None]                # bool[J,W]
+        job_pick = jnp.min(
+            jnp.where(active & idle[None, :], j_col, J), axis=0
+        )                                                       # int32[W]
+        launch2, task2 = late_bind(job_pick, pend_task, tasks.job, job_start)
+        start = t + 3 * cfg.hop  # get-task RPC round trip + launch
+        task_finish, worker_finish, worker_task = apply_launch(
+            launch2, task2, start, task_finish, worker_finish, worker_task
+        )
+        messages = messages + 2 * jnp.sum(launch2, dtype=jnp.int32)
+
+        # -- 4. central scheduler: queued long window -> free long partition
+        long_head = s.long_head
+        if NL:
+            wtask = jax.lax.dynamic_slice(long_fifo, (long_head,), (CL,))
+            wsub = submit_pad[jnp.minimum(wtask, T)]
+            wsub = jnp.where(wtask >= T, jnp.inf, wsub)
+            fpad = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+            launched = ~jnp.isinf(fpad[wtask]) | (wtask >= T)   # bool[CL]
+            queued = ~launched & (wsub <= t)
+            nq = jnp.sum(queued, dtype=jnp.int32)
+            # sticky launches punch holes mid-window: sort queued positions
+            # ahead of the CL sentinels to recover FIFO order
+            fifo = jnp.sort(jnp.where(queued, cl_row, CL))
+            avail = ((worker_finish <= t) & (w_row >= R))[None, :]
+            ranks = match_fn(avail, nq[None])[0]                # int32[W]
+            sel_pos = fifo[jnp.clip(ranks, 0, CL - 1)]
+            sel_task = jnp.where(
+                ranks >= 0, wtask[jnp.clip(sel_pos, 0, CL - 1)], T
+            )
+            launch3 = sel_task < T
+            task_finish, worker_finish, worker_task = apply_launch(
+                launch3, sel_task, start, task_finish, worker_finish, worker_task
+            )
+            messages = messages + jnp.sum(launch3, dtype=jnp.int32)
+            # advance the head past the launched prefix
+            fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+            launched2 = ~jnp.isinf(fpad2[wtask]) | (wtask >= T)
+            lead = jnp.sum(
+                jnp.cumprod(launched2.astype(jnp.int32)), dtype=jnp.int32
+            )
+            long_head = jnp.minimum(long_head + lead, NL)
+
+        return s.replace(
+            t=t + cfg.dt,
+            rnd=s.rnd + 1,
+            task_finish=task_finish,
+            worker_finish=worker_finish,
+            worker_task=worker_task,
+            probed=s.probed | newly,
+            reserv=reserv,
+            long_head=long_head,
+            messages=messages,
+            probes=probes,
+        )
+
+    return step
+
+
+def simulate_fixed(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    seed: jax.Array | int,
+    num_rounds: int,
+    match_fn: MatchFn | None = None,
+) -> EagleState:
+    """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed
+    and in the submit-time arrays)."""
+    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
+    step = make_eagle_step(cfg, tasks, key, match_fn)
+    state = init_eagle_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
+    return state

@@ -24,9 +24,37 @@ priority.  The semantic differences vs. the event backend:
   * **Batch granularity** — per-(GM, LM) request batching is implicit (one
     round = one batch) rather than bounded by ``batch_limit``.
 
+Per-scheduler contract addenda (megha/sparrow specifics live in their
+module docstrings; these are the eagle/pigeon counterparts):
+
+  * **Eagle probe-rejection timing** — SSS rejection and re-routing are
+    resolved *within the arrival round*, against the ground-truth set of
+    long-running workers at that instant.  The event backend spreads the
+    reject -> resend chain over network hops and consults a possibly stale
+    SS bit-vector adopted from the previous rejection; simx collapses the
+    chain to (at most) two instantaneous re-routes — once to a random
+    worker, once to the never-long short partition — so rejected probes
+    reach their final node up to ``2 * hop`` earlier and with a slightly
+    higher resend rate (random re-route targets stand in for SS-clear
+    targeting).  The central long-job scheduler launches only onto
+    actually-free long-partition workers: a long task whose event-backend
+    counterpart would head-of-line block behind a running short task
+    instead stays queued centrally, which shifts (not drops) its wait.
+  * **Pigeon group-master quantization** — each group coordinator serves
+    its high/low FIFOs once per round: a task arriving to a group with a
+    free worker launches at the round boundary instead of on arrival
+    (within the global ``dt`` quantization bound), and weighted fair
+    queuing is applied as a per-round *allocation* of the group's free
+    unreserved workers (``wfq_weight`` high : 1 low, phase carried by the
+    ``since_low`` counter) rather than per-dequeue alternation.  Because
+    every launch in a round shares one start time, only the high/low
+    counts are observable — the closed form is exact whenever either queue
+    drains within the round and a faithful ratio under sustained
+    contention.
+
 What this buys: the entire simulation is one compiled program — a Fig. 2
 sweep point at 50k workers is a ``scan`` over dense ``[G, W]`` arrays, and a
-whole (seed x config) grid runs as one ``vmap``.  See
+whole (seed x load) grid runs as one ``vmap`` (``repro.simx.sweep``).  See
 ``benchmarks/bench_simx.py`` for the events-vs-simx throughput comparison.
 """
 
@@ -41,22 +69,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.base import LONG_JOB_THRESHOLD
+from repro.core.megha import grid_workers
 from repro.core.metrics import JobRecord, RunMetrics, TaskRecord, classify_long
+from repro.simx import eagle as simx_eagle
 from repro.simx import megha as simx_megha
+from repro.simx import pigeon as simx_pigeon
 from repro.simx import sparrow as simx_sparrow
 from repro.simx.state import (
+    EagleState,
     MeghaState,
+    PigeonState,
     SimxConfig,
     SparrowState,
     TaskArrays,
     export_workload,
+    init_eagle_state,
     init_megha_state,
+    init_pigeon_state,
     init_sparrow_state,
 )
 from repro.workload.traces import Workload
 
-#: Schedulers the simx backend implements.
-SCHEDULERS = ("megha", "sparrow")
+#: Schedulers the simx backend implements — the full Fig. 2 matrix.
+SCHEDULERS = ("megha", "sparrow", "eagle", "pigeon")
 
 
 def scan_rounds(step: Callable, state, num_rounds: int):
@@ -123,7 +158,7 @@ class SimxRun:
     workload_name: str
     cfg: SimxConfig
     tasks: TaskArrays
-    state: MeghaState | SparrowState
+    state: MeghaState | SparrowState | EagleState | PigeonState
 
     @property
     def end_time(self) -> float:
@@ -181,8 +216,20 @@ class SimxRun:
                 )
             )
         if include_tasks:
-            worker_queue = self.scheduler == "sparrow"
             t_job = np.asarray(self.tasks.job)
+            # late-binding paths queue at the worker; centrally scheduled
+            # paths queue at the scheduling entity.  Eagle splits per task:
+            # short jobs ride the probe path, long jobs the central FIFO
+            # (matching the event backend's d_queue_* bookkeeping).
+            if self.scheduler == "sparrow":
+                worker_queue = np.ones(self.tasks.num_tasks, bool)
+            elif self.scheduler == "eagle":
+                worker_queue = (
+                    np.asarray(self.tasks.job_est)[t_job]
+                    < self.cfg.long_threshold
+                )
+            else:
+                worker_queue = np.zeros(self.tasks.num_tasks, bool)
             t_dur = np.asarray(self.tasks.duration, np.float64)
             t_sub = np.asarray(self.tasks.submit, np.float64)
             t_fin_raw = np.asarray(self.state.task_finish, np.float64)
@@ -203,7 +250,7 @@ class SimxRun:
                     pre = max(0.0, t_start[i] - t_sub[i])
                     tr.d_comm = min(pre, hops)
                     wait = pre - tr.d_comm
-                    if worker_queue:
+                    if worker_queue[i]:
                         tr.d_queue_worker = wait
                     else:
                         tr.d_queue_scheduler = wait
@@ -220,6 +267,12 @@ def simulate_workload(
     num_lms: int = 8,
     heartbeat_interval: float = 5.0,
     probe_ratio: int = 2,
+    long_threshold: float = LONG_JOB_THRESHOLD,
+    short_partition_fraction: float = 0.10,
+    num_distributors: int = 5,
+    group_size: int = 40,
+    reserved_per_group: int = 2,
+    weight: int = 4,
     dt: float = 0.05,
     seed: int = 0,
     chunk: int = 256,
@@ -232,6 +285,8 @@ def simulate_workload(
 
     Mirrors ``sim.simulator.run_simulation`` semantics; ``until`` caps the
     simulated time span instead of running until all tasks finish.
+    Scheduler-specific knobs carry the event backend's names and defaults
+    (``weight`` maps to ``SimxConfig.wfq_weight``).
     """
     name = scheduler.lower()
     if name not in SCHEDULERS:
@@ -240,36 +295,38 @@ def simulate_workload(
         )
     tasks = export_workload(workload)
     if name == "megha":
-        # shave workers so the partition grid divides evenly (same as the
-        # event backend's make_scheduler)
-        per = num_workers // (num_gms * num_lms)
-        cfg = SimxConfig(
-            num_workers=per * num_gms * num_lms,
-            num_gms=num_gms,
-            num_lms=num_lms,
-            heartbeat_interval=heartbeat_interval,
-            probe_ratio=probe_ratio,
-            dt=dt,
-            seed=seed,
-        )
-        key = jax.random.PRNGKey(seed)
+        num_workers = grid_workers(num_workers, num_gms, num_lms)
+    cfg = SimxConfig(
+        num_workers=num_workers,
+        num_gms=num_gms,
+        num_lms=num_lms,
+        heartbeat_interval=heartbeat_interval,
+        probe_ratio=probe_ratio,
+        long_threshold=long_threshold,
+        short_partition_fraction=short_partition_fraction,
+        num_distributors=num_distributors,
+        group_size=group_size,
+        reserved_per_group=reserved_per_group,
+        wfq_weight=weight,
+        dt=dt,
+        seed=seed,
+    )
+    key = jax.random.PRNGKey(seed)
+    match_fn = simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret)
+    if name == "megha":
         orders = simx_megha.gm_orders(key, cfg)
-        match_fn = simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret)
         step = simx_megha.make_megha_step(cfg, tasks, orders, match_fn)
         state = init_megha_state(cfg, tasks.num_tasks)
-    else:
-        cfg = SimxConfig(
-            num_workers=num_workers,
-            num_gms=num_gms,
-            num_lms=num_lms,
-            heartbeat_interval=heartbeat_interval,
-            probe_ratio=probe_ratio,
-            dt=dt,
-            seed=seed,
-        )
-        probes = simx_sparrow.probe_mask(jax.random.PRNGKey(seed), cfg, tasks)
+    elif name == "sparrow":
+        probes = simx_sparrow.probe_mask(key, cfg, tasks)
         step = simx_sparrow.make_sparrow_step(cfg, tasks, probes)
         state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    elif name == "eagle":
+        step = simx_eagle.make_eagle_step(cfg, tasks, key, match_fn)
+        state = init_eagle_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    else:
+        step = simx_pigeon.make_pigeon_step(cfg, tasks, match_fn)
+        state = init_pigeon_state(cfg, tasks.num_tasks)
     cap = max_rounds if max_rounds is not None else estimate_rounds(cfg, tasks)
     if until is not None:
         cap = min(cap, int(math.ceil(until / dt)))

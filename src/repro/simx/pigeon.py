@@ -1,0 +1,219 @@
+"""Pigeon transition rule for the simx round-stepped backend.
+
+Federated two-layer scheduling (paper §2.2.4) over dense per-group arrays:
+
+  * **Static distribution** — the event backend's distributors spread each
+    job's tasks round-robin (task by task, persistent per-distributor
+    counters, jobs round-robin over distributors).  That mapping depends
+    only on the trace, so the task -> group assignment is precomputed
+    exactly, in numpy, at step-build time.
+  * **Per-group FIFOs** — each group holds a high-priority (short job) and
+    a low-priority (long job) FIFO.  Tasks arrive in submit order, groups
+    launch strictly from the FIFO head, so each queue is a windowed head
+    pointer over a compact per-group task layout (megha's window trick,
+    without the failure/retry machinery: coordinators have current
+    knowledge of their own group, so every proposal launches).
+  * **Reserved workers** — the first ``reserved_per_group`` workers of each
+    group serve high-priority tasks only; high tasks prefer unreserved
+    workers, low tasks never touch reserved ones.
+  * **WFQ** — unreserved capacity is split between the two queues by a
+    closed-form weighted-fair-queuing allocation: per ``wfq_weight``
+    high-priority launches, one low-priority launch, with the carried
+    ``since_low`` counter preserving the pattern phase across rounds.
+    Within a round all launches share one start time, so only the
+    high/low *counts* matter, not their interleaving — the closed form is
+    exact whenever one queue drains and a faithful ratio otherwise (the
+    group-master quantization note in ``engine`` spells this out).
+
+The key pathology Megha fixes is preserved: a task assigned to a group
+never migrates, so it queues even when other groups have idle workers.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.simx.megha import MatchFn, default_match_fn
+from repro.simx.state import PigeonState, SimxConfig, TaskArrays, init_pigeon_state
+
+
+def task_groups(cfg: SimxConfig, tasks: TaskArrays) -> np.ndarray:
+    """int[T] — the group each task is distributed to, replicating the
+    event backend's persistent per-distributor round-robin exactly."""
+    NG, D = cfg.num_groups, cfg.num_distributors
+    ntasks = np.asarray(tasks.job_ntasks)
+    rr = np.arange(D, dtype=np.int64)  # each distributor decorrelates its start
+    out = np.empty(tasks.num_tasks, np.int32)
+    k = 0
+    for p in range(tasks.num_jobs):
+        d = p % D
+        c = int(ntasks[p])
+        out[k : k + c] = (rr[d] + np.arange(c)) % NG
+        rr[d] += c
+        k += c
+    return out
+
+
+def make_pigeon_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    match_fn: MatchFn | None = None,
+) -> Callable[[PigeonState], PigeonState]:
+    """Build the jittable one-round transition function.
+
+    Round order: completions (implicit via ``worker_finish``) -> WFQ split
+    of each group's free unreserved workers between its high/low queue
+    heads -> high overflow onto reserved workers -> launch + head advance.
+    """
+    if match_fn is None:
+        match_fn = default_match_fn()
+    W = cfg.num_workers
+    T = tasks.num_tasks
+    NG = cfg.num_groups
+    weight = cfg.wfq_weight
+    # -- worker grid [NG, S]: contiguous ranges, last group absorbs the
+    #    remainder, pad slots get the W sentinel (dropped by scatters)
+    sizes = np.full(NG, cfg.group_size, np.int64)
+    sizes[-1] = W - (NG - 1) * cfg.group_size
+    S = int(sizes.max())
+    wg_np = np.full((NG, S), W, np.int64)
+    rsv_np = np.zeros((NG, S), bool)
+    for g in range(NG):
+        base = g * cfg.group_size
+        wg_np[g, : sizes[g]] = base + np.arange(sizes[g])
+        rsv_np[g, : min(cfg.reserved_per_group, sizes[g])] = True
+    wg = jnp.asarray(wg_np, jnp.int32)
+    reserved = jnp.asarray(rsv_np)
+    # -- exact static task -> group distribution, split by priority class
+    gt = task_groups(cfg, tasks)
+    high_task = np.asarray(tasks.job_est)[np.asarray(tasks.job)] < cfg.long_threshold
+    C = max(S, 1)  # window width: a group launches at most S tasks per round
+
+    def layout(mask: np.ndarray) -> jax.Array:
+        length = int(np.max(np.bincount(gt[mask], minlength=NG))) if mask.any() else 0
+        rows = np.full((NG, length + C), T, np.int32)
+        for g in range(NG):
+            mine = np.nonzero(mask & (gt == g))[0]
+            rows[g, : mine.size] = mine
+        return jnp.asarray(rows)
+
+    high_fifo = layout(high_task)      # int32[NG, Lh+C], ids ascending = FIFO
+    low_fifo = layout(~high_task)      # int32[NG, Ll+C]
+    len_h = high_fifo.shape[1] - C
+    len_l = low_fifo.shape[1] - C
+    submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
+    dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
+    wf_pad_inf = jnp.float32([jnp.inf])
+
+    def slice_rows(mat, starts, width):
+        return jax.vmap(
+            lambda row, st: jax.lax.dynamic_slice(row, (st,), (width,))
+        )(mat, starts)
+
+    def window(fifo, heads, t):
+        """Window task ids + queued counts.  Launches are strictly FIFO and
+        the head fully advances every round, so the window never contains a
+        launched task and 'queued' is just the submitted prefix."""
+        wtask = slice_rows(fifo, heads, C)                      # int32[NG,C]
+        wsub = jnp.where(wtask >= T, jnp.inf, submit_pad[jnp.minimum(wtask, T)])
+        return wtask, jnp.sum(wsub <= t, axis=1, dtype=jnp.int32)
+
+    def step(s: PigeonState) -> PigeonState:
+        t = s.t
+        # -- 1. free capacity per group (completions implicit) --------------
+        wf_g = jnp.concatenate([s.worker_finish, wf_pad_inf])[wg]  # [NG,S]
+        free = wf_g <= t
+        free_u = free & ~reserved
+        free_r = free & reserved
+        nfu = jnp.sum(free_u, axis=1, dtype=jnp.int32)             # int32[NG]
+        nfr = jnp.sum(free_r, axis=1, dtype=jnp.int32)
+
+        # -- 2. queued counts + WFQ split of unreserved capacity ------------
+        wh, qh = window(high_fifo, s.high_head, t)
+        wl, ql = window(low_fifo, s.low_head, t)
+        total_u = jnp.minimum(nfu, qh + ql)
+        lead = jnp.maximum(0, weight - s.since_low)  # highs before first low
+        low_wfq = jnp.where(
+            total_u > lead, 1 + (total_u - lead - 1) // (weight + 1), 0
+        )
+        n_low = jnp.clip(low_wfq, jnp.maximum(total_u - qh, 0), jnp.minimum(ql, total_u))
+        n_high_u = total_u - n_low
+        n_high_r = jnp.minimum(qh - n_high_u, nfr)  # overflow onto reserved
+        since_low = jnp.maximum(0, s.since_low + n_high_u - weight * n_low)
+
+        # -- 3. rank-and-select free workers, map ranks to FIFO positions ---
+        ranks_u = match_fn(free_u, n_high_u + n_low)               # int32[NG,S]
+        ru = jnp.clip(ranks_u, 0, C - 1)
+        task_u = jnp.where(
+            ranks_u < 0,
+            T,
+            jnp.where(
+                ranks_u < n_high_u[:, None],
+                jnp.take_along_axis(wh, ru, axis=1),
+                jnp.take_along_axis(
+                    wl, jnp.clip(ranks_u - n_high_u[:, None], 0, C - 1), axis=1
+                ),
+            ),
+        )
+        ranks_r = match_fn(free_r, n_high_r)
+        task_r = jnp.where(
+            ranks_r < 0,
+            T,
+            jnp.take_along_axis(
+                wh, jnp.clip(n_high_u[:, None] + ranks_r, 0, C - 1), axis=1
+            ),
+        )
+        task_g = jnp.minimum(task_u, task_r)  # disjoint slots: one is T
+        launch = task_g < T                                         # [NG,S]
+
+        # -- 4. launch: client->distributor->coordinator->worker = 3 hops ---
+        start = t + 3 * cfg.hop
+        fin = start + dur_pad[jnp.minimum(task_g, T)]
+        task_finish = s.task_finish.at[jnp.where(launch, task_g, T)].set(
+            fin, mode="drop"
+        )
+        worker_finish = s.worker_finish.at[jnp.where(launch, wg, W)].set(
+            fin, mode="drop"
+        )
+        # messages: one distributor->coordinator per arriving task, one
+        # coordinator->worker per launch
+        arrived = jnp.sum(
+            (tasks.submit > t - cfg.dt) & (tasks.submit <= t), dtype=jnp.int32
+        )
+        messages = (
+            s.messages + arrived + jnp.sum(launch, dtype=jnp.int32)
+        )
+
+        return s.replace(
+            t=t + cfg.dt,
+            rnd=s.rnd + 1,
+            task_finish=task_finish,
+            worker_finish=worker_finish,
+            high_head=jnp.minimum(s.high_head + n_high_u + n_high_r, len_h),
+            low_head=jnp.minimum(s.low_head + n_low, len_l),
+            since_low=since_low,
+            messages=messages,
+        )
+
+    return step
+
+
+def simulate_fixed(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    seed: jax.Array | int,
+    num_rounds: int,
+    match_fn: MatchFn | None = None,
+) -> PigeonState:
+    """Run exactly ``num_rounds`` rounds from an idle DC.  Pigeon's
+    transition is deterministic given the trace; ``seed`` is accepted for
+    signature parity with the other schedulers (vmap-able all the same)."""
+    del seed  # no randomized state: distribution is static round-robin
+    step = make_pigeon_step(cfg, tasks, match_fn)
+    state = init_pigeon_state(cfg, tasks.num_tasks)
+    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
+    return state

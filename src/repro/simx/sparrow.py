@@ -32,6 +32,45 @@ import jax.numpy as jnp
 from repro.simx.state import SimxConfig, SparrowState, TaskArrays, init_sparrow_state
 
 
+def late_bind(
+    job_pick: jax.Array, pend_task: jax.Array, job: jax.Array, job_start: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Late-binding core shared by the sparrow and eagle rules: worker ``w``
+    serves job ``job_pick[w]`` (``J`` = no claim); the k-th serving worker of
+    job j (worker-index order, capped at j's pending count) gets j's k-th
+    pending task.  Tasks must be exported contiguously per job (the
+    ``export_workload`` layout): the cumulative task count before each job
+    (``job_start``) turns one global cumsum over ``pend_task`` into
+    within-job pending ranks.  Returns ``(launch bool[W], task int32[W])``
+    with ``T`` meaning none.
+    """
+    T = job.shape[0]
+    W = job_pick.shape[0]
+    J = job_start.shape[0]
+    t_row = jnp.arange(T, dtype=jnp.int32)
+    j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
+    pending = jnp.zeros(J, jnp.int32).at[job].add(pend_task.astype(jnp.int32))
+    claim_j = job_pick[None, :] == j_col                        # bool[J,W]
+    serve_rank = jnp.cumsum(claim_j, axis=1, dtype=jnp.int32) - 1
+    serve = claim_j & (serve_rank < pending[:, None])
+    c = jnp.cumsum(pend_task, dtype=jnp.int32)
+    base = jnp.where(job_start > 0, c[jnp.maximum(job_start - 1, 0)], 0)
+    prank = c - 1 - base[job]                                   # int32[T]
+    slot = jnp.full((J, W), T, jnp.int32).at[
+        job, jnp.where(pend_task & (prank < W), prank, W)
+    ].set(t_row, mode="drop")                                   # int32[J,W]
+    srank = jnp.where(serve, serve_rank, W)
+    task_pick = jnp.min(
+        jnp.where(
+            serve,
+            jnp.take_along_axis(slot, jnp.clip(srank, 0, W - 1), axis=1),
+            T,
+        ),
+        axis=0,
+    )                                                           # int32[W]
+    return jnp.any(serve, axis=0), task_pick
+
+
 def probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.Array:
     """bool[J, W] — the min(d * n_tasks, W) DISTINCT workers each job probes.
 
@@ -57,7 +96,6 @@ def make_sparrow_step(
     T = tasks.num_tasks
     J = tasks.num_jobs
     d = cfg.probe_ratio
-    t_row = jnp.arange(T, dtype=jnp.int32)
     j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
     # tasks are exported contiguously per job: cumulative task count before
     # each job gives the within-job pending rank via one global cumsum
@@ -93,29 +131,9 @@ def make_sparrow_step(
         # FIFO reservation queue: earliest job (lowest index) wins the worker
         job_pick = jnp.min(jnp.where(active, j_col, J), axis=0)     # int32[W]
         idle = s.worker_finish <= t
-        claim = idle & (job_pick < J)                               # bool[W]
-        # cap claimants at the job's pending count, worker-index order
-        claim_j = claim[None, :] & (job_pick[None, :] == j_col)     # bool[J,W]
-        serve_rank = jnp.cumsum(claim_j, axis=1, dtype=jnp.int32) - 1
-        serve = claim_j & (serve_rank < pending[:, None])           # bool[J,W]
-        # the k-th serving worker of job j gets j's k-th pending task;
-        # within-job pending rank = global cumsum minus the job's base count
-        c = jnp.cumsum(pend_task, dtype=jnp.int32)
-        base = jnp.where(job_start > 0, c[jnp.maximum(job_start - 1, 0)], 0)
-        prank = c - 1 - base[tasks.job]                             # int32[T]
-        slot = jnp.full((J, W), T, jnp.int32).at[
-            tasks.job, jnp.where(pend_task & (prank < W), prank, W)
-        ].set(t_row, mode="drop")                                   # int32[J,W]
-        srank = jnp.where(serve, serve_rank, W)
-        task_pick = jnp.min(
-            jnp.where(
-                serve,
-                jnp.take_along_axis(slot, jnp.clip(srank, 0, W - 1), axis=1),
-                T,
-            ),
-            axis=0,
-        )                                                           # int32[W]
-        launch = jnp.any(serve, axis=0)                             # bool[W]
+        launch, task_pick = late_bind(
+            jnp.where(idle, job_pick, J), pend_task, tasks.job, job_start
+        )
         lt = jnp.where(launch, task_pick, T)
         # client->scheduler hop + worker->scheduler get-task RPC round trip
         start = t + 3 * cfg.hop

@@ -7,11 +7,13 @@ whole simulation jits, scans, and vmaps:
                       (tasks sorted by job submission time, so task index
                       order == FIFO arrival order).
   * ``SimxConfig``  — static (python-level) simulation parameters shared by
-                      the megha and sparrow transition rules.
-  * ``MeghaState`` / ``SparrowState`` — the scan carries: dataclass-of-arrays
-    pytrees holding ground truth, stale views, per-worker run state, per-task
-    lifecycle state, and the metric accumulators mirroring ``RunMetrics``
-    (inconsistencies, repartitions, messages, probes).
+                      all four transition rules (megha, sparrow, eagle,
+                      pigeon), incl. the eagle/pigeon-specific knobs.
+  * ``MeghaState`` / ``SparrowState`` / ``EagleState`` / ``PigeonState`` —
+    the scan carries: dataclass-of-arrays pytrees holding ground truth, stale
+    views, per-worker run state, per-task lifecycle state, and the metric
+    accumulators mirroring ``RunMetrics`` (inconsistencies, repartitions,
+    messages, probes).
 
 Task lifecycle is encoded implicitly by ONE float array: both backends
 record ``task_finish = start + duration`` at LAUNCH, since the completion
@@ -50,6 +52,8 @@ class TaskArrays:
     job_submit: jax.Array   # float32[J]
     job_ideal: jax.Array    # float32[J] — IdealJCT = max task duration
     job_ntasks: jax.Array   # int32[J]
+    job_est: jax.Array      # float32[J] — estimated runtime (Eagle/Pigeon
+                            # long/short classification; defaults to IdealJCT)
 
     @property
     def num_tasks(self) -> int:
@@ -70,6 +74,7 @@ def export_workload(wl: Workload) -> TaskArrays:
     job_sub = np.empty(len(jobs), np.float32)
     job_ideal = np.empty(len(jobs), np.float32)
     job_nt = np.empty(len(jobs), np.int32)
+    job_est = np.empty(len(jobs), np.float32)
     k = 0
     for p, j in enumerate(jobs):
         c = j.num_tasks
@@ -79,6 +84,7 @@ def export_workload(wl: Workload) -> TaskArrays:
         job_sub[p] = j.submit_time
         job_ideal[p] = j.ideal_jct
         job_nt[p] = c
+        job_est[p] = j.estimated_duration
         k += c
     return TaskArrays(
         job=jnp.asarray(task_job),
@@ -87,6 +93,7 @@ def export_workload(wl: Workload) -> TaskArrays:
         job_submit=jnp.asarray(job_sub),
         job_ideal=jnp.asarray(job_ideal),
         job_ntasks=jnp.asarray(job_nt),
+        job_est=jnp.asarray(job_est),
     )
 
 
@@ -100,8 +107,16 @@ class SimxConfig:
     dt: float = 0.05                 # round length (seconds of simulated time)
     heartbeat_interval: float = 5.0  # §4.1
     hop: float = 0.0005              # §4.1 constant network delay
-    probe_ratio: int = 2             # sparrow's d
+    probe_ratio: int = 2             # sparrow/eagle's d
     match_window: int = 0            # per-GM FIFO window; 0 = auto (see megha)
+    # eagle (§2.2.3): estimate-based short/long split + reserved short slice
+    long_threshold: float = 10.0     # core.base.LONG_JOB_THRESHOLD
+    short_partition_fraction: float = 0.10
+    # pigeon (§2.2.4): fixed worker groups + weighted fair queuing
+    num_distributors: int = 5
+    group_size: int = 40
+    reserved_per_group: int = 2      # high-priority-only workers per group
+    wfq_weight: int = 4              # one low-priority task per `weight` high
     seed: int = 0
 
     def validate_megha_grid(self) -> None:
@@ -128,6 +143,20 @@ class SimxConfig:
         return jnp.asarray(
             (w % self.workers_per_lm) // self.partition_size, jnp.int32
         )
+
+    # -- eagle ----------------------------------------------------------
+    @property
+    def short_reserved(self) -> int:
+        """Workers [0, short_reserved) only ever run short tasks (Eagle's
+        short partition; mirrors ``EagleConfig.short_reserved``)."""
+        return max(1, int(self.num_workers * self.short_partition_fraction))
+
+    # -- pigeon ---------------------------------------------------------
+    @property
+    def num_groups(self) -> int:
+        """Fixed worker groups; the last group absorbs the remainder
+        (mirrors ``PigeonConfig.num_groups`` + the coordinator layout)."""
+        return max(1, self.num_workers // self.group_size)
 
 
 def _common_fields(cfg: SimxConfig, num_tasks: int) -> dict:
@@ -200,5 +229,70 @@ class SparrowState:
 def init_sparrow_state(cfg: SimxConfig, num_tasks: int, num_jobs: int) -> SparrowState:
     return SparrowState(
         probed=jnp.zeros(num_jobs, jnp.bool_),
+        **_common_fields(cfg, num_tasks),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class EagleState:
+    """Scan carry for the eagle transition rule."""
+
+    t: jax.Array
+    rnd: jax.Array
+    task_finish: jax.Array
+    worker_finish: jax.Array
+    worker_task: jax.Array   # int32[W] — last task launched here (T = none);
+                             # running long iff busy & its task's job is long
+    probed: jax.Array        # bool[J] — short job's probes placed
+    reserv: jax.Array        # bool[J, W] — live reservation mask (post-SSS
+                             # re-routing; rows are filled at arrival rounds)
+    long_head: jax.Array     # int32[] — launched prefix of the central FIFO
+    inconsistencies: jax.Array
+    repartitions: jax.Array
+    messages: jax.Array
+    probes: jax.Array
+
+    def replace(self, **kw) -> "EagleState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_eagle_state(cfg: SimxConfig, num_tasks: int, num_jobs: int) -> EagleState:
+    return EagleState(
+        worker_task=jnp.full(cfg.num_workers, num_tasks, jnp.int32),
+        probed=jnp.zeros(num_jobs, jnp.bool_),
+        reserv=jnp.zeros((num_jobs, cfg.num_workers), jnp.bool_),
+        long_head=jnp.int32(0),
+        **_common_fields(cfg, num_tasks),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PigeonState:
+    """Scan carry for the pigeon transition rule."""
+
+    t: jax.Array
+    rnd: jax.Array
+    task_finish: jax.Array
+    worker_finish: jax.Array
+    high_head: jax.Array     # int32[NG] — launched prefix of each group's
+    low_head: jax.Array      # int32[NG]   high/low-priority FIFO
+    since_low: jax.Array     # int32[NG] — WFQ: high tasks since the last low
+    inconsistencies: jax.Array
+    repartitions: jax.Array
+    messages: jax.Array
+    probes: jax.Array
+
+    def replace(self, **kw) -> "PigeonState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_pigeon_state(cfg: SimxConfig, num_tasks: int) -> PigeonState:
+    ng = cfg.num_groups
+    return PigeonState(
+        high_head=jnp.zeros(ng, jnp.int32),
+        low_head=jnp.zeros(ng, jnp.int32),
+        since_low=jnp.zeros(ng, jnp.int32),
         **_common_fields(cfg, num_tasks),
     )

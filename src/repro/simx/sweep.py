@@ -1,0 +1,195 @@
+"""Fig. 2 sweep driver: a (seed x load) grid compiled into ONE program.
+
+The paper's headline comparison sweeps scheduler x load at a fixed DC size
+and reports p50/p95 job delay per point.  For the synthetic trace, load
+only rescales inter-arrival times (same jobs, same tasks, same durations),
+so every grid point shares one ``TaskArrays`` *structure* and differs only
+in the ``submit`` / ``job_submit`` arrays — which makes the whole grid a
+``jax.vmap`` over (submit-times, seed) of ``simulate_fixed``:
+
+    grid = sweep_grid("megha", cfg, tasks, submit_g, job_submit_g, seeds, R)
+    grid["p50"]   # float32[L, S] — one percentile per (load, seed) point
+
+Structural arrays (``job``, ``duration``, ``job_ntasks``, ``job_est``) stay
+concrete python-level values: the step builders do numpy work on them
+(compact FIFO layouts, partition maps), so they are closed over rather
+than vmapped.  Only ``submit``/``job_submit`` and the seed are batched.
+
+Percentiles are reduced *inside* the compiled program — a 50k-worker grid
+never materializes per-task records on the host (compare
+``SimxRun.to_run_metrics``'s python-loop warning).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.megha import grid_workers
+from repro.simx import eagle as simx_eagle
+from repro.simx import megha as simx_megha
+from repro.simx import pigeon as simx_pigeon
+from repro.simx import sparrow as simx_sparrow
+from repro.simx.megha import MatchFn
+from repro.simx.state import SimxConfig, TaskArrays, export_workload
+from repro.workload.synth import synthetic_trace
+
+#: scheduler name -> round-synchronous simulate_fixed(cfg, tasks, seed, R)
+SIMULATE_FIXED: dict[str, Callable] = {
+    "megha": simx_megha.simulate_fixed,
+    "sparrow": simx_sparrow.simulate_fixed,
+    "eagle": simx_eagle.simulate_fixed,
+    "pigeon": simx_pigeon.simulate_fixed,
+}
+
+
+def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
+    """Reduce one finished state to the Fig. 2 observables, inside jit:
+    p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs) + completion
+    counts."""
+    done = state.task_finish <= state.t
+    fin = jnp.where(done, state.task_finish, jnp.inf)
+    job_finish = jnp.full(tasks.num_jobs, -jnp.inf).at[tasks.job].max(fin)
+    delays = job_finish - tasks.job_submit - tasks.job_ideal
+    delays = jnp.where(jnp.isfinite(job_finish), delays, jnp.nan)
+    return {
+        "p50": jnp.nanpercentile(delays, 50),
+        "p95": jnp.nanpercentile(delays, 95),
+        "mean": jnp.nanmean(delays),
+        "jobs_done": jnp.sum(jnp.isfinite(job_finish), dtype=jnp.int32),
+        "tasks_done": jnp.sum(done, dtype=jnp.int32),
+    }
+
+
+def make_load_grid(
+    loads: Sequence[float],
+    *,
+    num_jobs: int,
+    tasks_per_job: int,
+    num_workers: int,
+    task_duration: float = 1.0,
+    seed: int = 0,
+    arrivals: str = "poisson",
+) -> tuple[TaskArrays, jax.Array, jax.Array]:
+    """One synthetic trace per load, stacked along a leading load axis.
+
+    Returns ``(template, submit[L, T], job_submit[L, J])`` — the template
+    carries the load-invariant structure (same trace seed => identical
+    durations/shapes across loads; only arrival times move).
+    """
+    template = None
+    submit, job_submit = [], []
+    for load in loads:
+        tasks = export_workload(
+            synthetic_trace(
+                num_jobs=num_jobs,
+                tasks_per_job=tasks_per_job,
+                task_duration=task_duration,
+                load=load,
+                num_workers=num_workers,
+                seed=seed,
+                arrivals=arrivals,
+            )
+        )
+        if template is None:
+            template = tasks
+        submit.append(tasks.submit)
+        job_submit.append(tasks.job_submit)
+    return template, jnp.stack(submit), jnp.stack(job_submit)
+
+
+def sweep_grid(
+    scheduler: str,
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    submit_grid: jax.Array,      # float32[L, T]
+    job_submit_grid: jax.Array,  # float32[L, J]
+    seeds: jax.Array,            # int[S]
+    num_rounds: int,
+    match_fn: MatchFn | None = None,
+) -> dict[str, jax.Array]:
+    """Run the whole (load x seed) grid as one jitted vmap-of-vmap program.
+
+    ``match_fn`` selects the rank-and-select implementation for the
+    schedulers that match (megha/eagle/pigeon; see
+    ``megha.default_match_fn`` for the Pallas-vs-jnp choice).  Returns
+    ``point_summary`` fields stacked to ``[L, S]`` arrays plus the total
+    simulated task count (for tasks/sec accounting).
+    """
+    name = scheduler.lower()
+    sim = SIMULATE_FIXED[name]
+    sim_kw = {} if name == "sparrow" else {"match_fn": match_fn}
+
+    def point(sub, jsub, seed):
+        tk = dataclasses.replace(tasks, submit=sub, job_submit=jsub)
+        return point_summary(sim(cfg, tk, seed, num_rounds, **sim_kw), tk)
+
+    grid = jax.jit(
+        jax.vmap(                     # loads
+            jax.vmap(point, in_axes=(None, None, 0)),  # seeds
+            in_axes=(0, 0, None),
+        )
+    )
+    return grid(submit_grid, job_submit_grid, jnp.asarray(seeds))
+
+
+def fig2_sweep(
+    scheduler: str,
+    *,
+    loads: Sequence[float] = (0.2, 0.5, 0.8),
+    num_seeds: int = 3,
+    num_workers: int = 10_000,
+    num_jobs: int = 200,
+    tasks_per_job: int = 1000,
+    dt: float = 0.05,
+    slack: float = 4.0,
+    trace_seed: int = 0,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    **cfg_kwargs,
+) -> dict[str, np.ndarray]:
+    """Convenience wrapper: build the load grid, size the round budget off
+    the slowest point, run the compiled grid, return numpy arrays.
+
+    The defaults mirror the paper's synthetic trace (jobs of 1000 one-second
+    tasks) at Fig. 2 scale; ``benchmarks/bench_simx.py --full`` drives this
+    at 50k workers.  On TPU hosts pass ``use_pallas=True`` (and
+    ``interpret=False``) to run the rank-and-select match as a compiled
+    Pallas kernel.
+    """
+    name = scheduler.lower()
+    if name == "megha":
+        num_workers = grid_workers(
+            num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
+        )
+    cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
+    tasks, submit_g, job_submit_g = make_load_grid(
+        loads,
+        num_jobs=num_jobs,
+        tasks_per_job=tasks_per_job,
+        num_workers=num_workers,
+        seed=trace_seed,
+    )
+    from repro.simx.engine import estimate_rounds
+
+    num_rounds = max(
+        estimate_rounds(
+            cfg,
+            dataclasses.replace(tasks, submit=submit_g[i], job_submit=job_submit_g[i]),
+            slack=slack,
+        )
+        for i in range(len(loads))
+    )
+    out = sweep_grid(
+        name, cfg, tasks, submit_g, job_submit_g, jnp.arange(num_seeds), num_rounds,
+        match_fn=simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret),
+    )
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["loads"] = np.asarray(loads)
+    res["num_rounds"] = np.asarray(num_rounds)
+    res["num_tasks"] = np.asarray(tasks.num_tasks)
+    return res
