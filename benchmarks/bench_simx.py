@@ -23,6 +23,14 @@ Two sections:
    one-second tasks (Table 1's synthetic trace) — and takes hours on CPU
    (see docs/fig2_sweep.md for expected runtimes and how to read the
    output against the paper's plots).
+
+3. **Fig. 4 fault grid** — the default grid always carries one
+   ``simx_fig4_smoke`` row (a tiny megha severity grid, so the fault path
+   can't silently rot in CI); ``--faults`` adds the full
+   (fraction x seed) availability grid for all four schedulers
+   (``repro.simx.sweep.fig4_sweep``; recipe in docs/fig4_faults.md).
+   ``--only-faults`` (module CLI) prints just the fault rows — the CI
+   smoke entrypoint.
 """
 
 from __future__ import annotations
@@ -53,6 +61,16 @@ SWEEP = dict(
 SWEEP_FULL = dict(
     loads=(0.2, 0.5, 0.8), num_seeds=2, num_workers=50_000, num_jobs=480,
     tasks_per_job=1000, dt=0.05,
+)
+
+#: Fig. 4 (fraction x seed) fault-severity grid shapes.
+FAULTS = dict(
+    fractions=(0.0, 0.1, 0.25), num_seeds=1, num_workers=256, num_jobs=16,
+    tasks_per_job=64, outage=2.0, gm_outages=1, dt=0.05,
+)
+FAULTS_FULL = dict(
+    fractions=(0.0, 0.05, 0.1, 0.2), num_seeds=2, num_workers=10_000,
+    num_jobs=100, tasks_per_job=500, outage=5.0, gm_outages=2, dt=0.05,
 )
 
 
@@ -109,7 +127,55 @@ def _sweep_rows(full: bool) -> list[str]:
     return rows
 
 
-def run(full: bool = False) -> list[str]:
+def _fault_rows(full: bool, schedulers=sxe.SCHEDULERS) -> list[str]:
+    """Section 3: one vmapped (fraction x seed) Fig. 4 grid per scheduler."""
+    spec = dict(FAULTS_FULL if full else FAULTS)
+    gm_outages = spec.pop("gm_outages")
+    megha_kw = dict(num_gms=4, num_lms=4, heartbeat_interval=1.0)
+    rows = []
+    grid_pts = len(spec["fractions"]) * spec["num_seeds"]
+    for sched in schedulers:
+        t0 = time.time()
+        r = sxs.fig4_sweep(
+            sched,
+            gm_outages=gm_outages if sched == "megha" else 0,
+            **spec,
+            **(megha_kw if sched == "megha" else {}),
+        )
+        wall = time.time() - t0
+        total = int(r["num_tasks"]) * grid_pts
+        done = int(np.sum(r["tasks_done"]))
+        p95 = r["p95"].mean(axis=1)  # seed-averaged per fraction
+        rows.append(
+            f"simx_fig4_{sched},{wall * 1e6 / max(total, 1):.2f},"
+            f"tasks_per_sec={total / wall:.0f};wall={wall:.2f}s;"
+            f"grid={len(spec['fractions'])}x{spec['num_seeds']};"
+            f"done={done}/{total};lost_top={int(np.sum(r['lost'][-1]))};"
+            f"p95_f0={p95[0]:.3f}s;p95_f{spec['fractions'][-1]:g}={p95[-1]:.3f}s"
+        )
+    return rows
+
+
+def _fault_smoke_row() -> list[str]:
+    """The always-on smoke: a minimal megha severity grid exercising the
+    fault path (crash wave + GM window + recovery) end to end."""
+    t0 = time.time()
+    r = sxs.fig4_sweep(
+        "megha", fractions=(0.0, 0.2), num_seeds=1, num_workers=128,
+        num_jobs=8, tasks_per_job=32, outage=1.5, gm_outages=1, dt=0.05,
+        num_gms=4, num_lms=4, heartbeat_interval=1.0,
+    )
+    wall = time.time() - t0
+    done = int(np.sum(r["tasks_done"]))
+    total = 2 * int(r["num_tasks"])
+    return [
+        f"simx_fig4_smoke,{wall * 1e6 / total:.2f},"
+        f"wall={wall:.2f}s;done={done}/{total};"
+        f"lost={int(np.sum(r['lost']))};p95_f0.2={float(r['p95'][-1, 0]):.3f}s"
+    ]
+
+
+def run(full: bool = False, faults: bool = False) -> list[str]:
     rows = []
     for workers in DC_SIZES_FULL if full else DC_SIZES:
         wl = _trace(workers)
@@ -134,9 +200,25 @@ def run(full: bool = False) -> list[str]:
                 f"speedup={tps / ev_tps:.1f}x"
             )
     rows.extend(_sweep_rows(full))
+    rows.extend(_fault_smoke_row())
+    if faults:
+        rows.extend(_fault_rows(full))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the Fig. 4 fault-severity grid rows")
+    ap.add_argument("--only-faults", action="store_true",
+                    help="print just the fault rows (the CI smoke entrypoint)")
+    args = ap.parse_args()
+    if args.only_faults:
+        out = _fault_smoke_row() + (_fault_rows(args.full) if args.faults else [])
+    else:
+        out = run(full=args.full, faults=args.faults)
+    for r in out:
         print(r)

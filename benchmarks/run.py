@@ -14,6 +14,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the simx Fig. 4 fault-severity grid rows")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: comparison,scalability,"
                          "prototype,sdps,workloads,kernels,simx")
@@ -42,7 +44,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in picked:
         t0 = time.time()
-        for row in suites[name].run(full=args.full):
+        kw = {"faults": True} if (args.faults and name == "simx") else {}
+        for row in suites[name].run(full=args.full, **kw):
             print(row)
         print(f"suite_{name}_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",
               file=sys.stderr)

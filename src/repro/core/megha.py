@@ -162,18 +162,22 @@ class LocalManager:
                 invalid.append(m)
         snapshot = list(self.avail) if invalid else None
         self.sched.metrics.messages += 1
-        loop.push(
-            self.sched.hop,
-            lambda: self.sched.gms[gm_id].on_lm_response(
-                self.lm_id, launched, invalid, snapshot
-            ),
-        )
+
+        def deliver_response():
+            # §3.5: the GM may have died while the response was in flight;
+            # launched tasks keep running, invalid mappings are dropped (the
+            # orphaned job is resubmitted elsewhere by the fault handler)
+            gm = self.sched.gms[gm_id]
+            if gm is not None:
+                gm.on_lm_response(self.lm_id, launched, invalid, snapshot)
+
+        loop.push(self.sched.hop, deliver_response)
 
     def _start_task(self, gm_id: int, m: _Mapping, start: float) -> None:
         loop = self.sched.loop
         gm = self.sched.gms[gm_id]
-        tr = gm.jobs[m.job_id].task_records[m.task_index]
-        tr.start_time = start
+        if gm is not None and m.job_id in gm.jobs:
+            gm.jobs[m.job_id].task_records[m.task_index].start_time = start
         finish = start + m.duration
         local = m.worker - self.lm_id * self.cfg.workers_per_lm
         loop.push_at(finish, lambda: self._complete(local, gm_id, m, finish))
@@ -184,10 +188,14 @@ class LocalManager:
         self.sched.metrics.messages += 1
         # completion message LM -> scheduling GM (0.5 ms); JRT uses worker
         # finish time, the message only gates *backfill* scheduling (§3.4).
-        self.sched.loop.push(
-            self.sched.hop,
-            lambda: self.sched.gms[gm_id].on_task_complete(m, finish),
-        )
+        def deliver_complete():
+            gm = self.sched.gms[gm_id]
+            if gm is not None:
+                gm.on_task_complete(m, finish)
+            # a dead scheduling GM drops the message: the freed worker is
+            # rediscovered by its partition owner via heartbeat (§3.4)
+
+        self.sched.loop.push(self.sched.hop, deliver_complete)
 
     # -- state dissemination ----------------------------------------------
     def snapshot(self) -> list[bool]:
@@ -342,7 +350,12 @@ class GlobalManager:
             # ... and retry the invalid tasks at the FRONT of the queue.
             for m in reversed(invalid):
                 self.inflight.discard(m.worker)
-                js = self.jobs[m.job_id]
+                js = self.jobs.get(m.job_id)
+                if js is None:
+                    # §3.5: a recovered (stateless) GM may receive responses
+                    # to its predecessor's proposals; the orphaned job was
+                    # resubmitted elsewhere, so drop the mapping
+                    continue
                 js.running -= 1
                 tr = js.task_records[m.task_index]
                 tr.d_comm += self.sched.hop  # the inconsistency response hop
@@ -432,10 +445,19 @@ class Megha(Scheduler):
         self.loop.push(self.cfg.heartbeat_interval, lambda: self._heartbeat(lm))
 
     def submit(self, job: Job) -> None:
-        """Jobs are distributed evenly (round-robin) across GMs (§3.2)."""
-        gm = self.gms[self._next_gm]
-        self._next_gm = (self._next_gm + 1) % self.cfg.num_gms
-        assert gm is not None, "job routed to failed GM; call recover_gm first"
+        """Jobs are distributed evenly (round-robin) across GMs (§3.2);
+        arrivals route past failed GMs to the next live one (§3.5) and only
+        error out when the whole scheduling tier is down."""
+        gm = None
+        for _ in range(self.cfg.num_gms):
+            gm = self.gms[self._next_gm]
+            self._next_gm = (self._next_gm + 1) % self.cfg.num_gms
+            if gm is not None:
+                break
+        if gm is None:
+            raise RuntimeError(
+                "no live GM to route job to; call recover_gm first"
+            )
         self.loop.push(self.hop, lambda gm=gm, job=job: gm.on_job(job))
         self._ensure_heartbeats()
 

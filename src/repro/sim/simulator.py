@@ -66,31 +66,49 @@ def run_simulation(
     until: Optional[float] = None,
     hooks: Optional[Callable[[Scheduler, EventLoop], None]] = None,
     backend: str = "events",
+    faults=None,
     **kwargs,
 ) -> RunMetrics:
     """Run one (scheduler, workload) simulation to completion.
 
-    ``hooks`` may inject fault events (GM/worker failures) after setup
-    (events backend only).  ``backend="simx"`` routes to the vectorized JAX
-    backend for any of megha/sparrow/eagle/pigeon; scheduler kwargs
-    (num_gms, num_lms, heartbeat_interval, seed, probe_ratio,
-    long_threshold, short_partition_fraction, num_distributors, group_size,
+    ``faults`` injects a fault schedule on EITHER backend: pass a
+    ``repro.simx.FaultPlan`` (worker failures + megha GM outages in
+    simulated seconds) and it installs the imperative ``fail_worker`` /
+    ``fail_gm``/``recover_gm`` hooks on the event loop or compiles into
+    the simx round step (where a dense ``FaultSchedule`` is also accepted,
+    and worker *down-windows* / heartbeat perturbation become available).
+    ``hooks`` remains the low-level escape hatch for arbitrary imperative
+    event injection (events backend only).
+
+    ``backend="simx"`` routes to the vectorized JAX backend for any of
+    megha/sparrow/eagle/pigeon; scheduler kwargs (num_gms, num_lms,
+    heartbeat_interval, seed, probe_ratio, long_threshold,
+    short_partition_fraction, num_distributors, group_size,
     reserved_per_group, weight) carry over, plus simx-specific ones
-    (dt, chunk, use_pallas).
+    (dt, chunk, use_pallas, faults).
     """
     if backend == "simx":
         if hooks is not None:
-            raise ValueError("fault-injection hooks require backend='events'")
+            raise ValueError(
+                "imperative hooks require backend='events'; pass faults= "
+                "(a FaultPlan / FaultSchedule) for simx fault injection"
+            )
         if max_events is not None:
             raise ValueError("max_events is event-backend-only; use until")
         from repro.simx import simulate_workload
 
         run = simulate_workload(
-            scheduler, workload, num_workers, until=until, **kwargs
+            scheduler, workload, num_workers, until=until, faults=faults,
+            **kwargs,
         )
         return run.to_run_metrics()
     if backend != "events":
         raise ValueError(f"unknown backend {backend!r}")
+    if faults is not None and not hasattr(faults, "install_events"):
+        raise ValueError(
+            "the events backend takes a backend-neutral FaultPlan; dense "
+            "FaultSchedules compile into the simx round step only"
+        )
     loop = EventLoop()
     metrics = RunMetrics(scheduler=scheduler, workload=workload.name)
     sched = make_scheduler(scheduler, loop, metrics, num_workers, **kwargs)
@@ -98,5 +116,7 @@ def run_simulation(
         loop.push_at(job.submit_time, lambda j=job: sched.submit(j))
     if hooks is not None:
         hooks(sched, loop)
+    if faults is not None:
+        faults.install_events(sched, loop)
     loop.run(until=until, max_events=max_events)
     return metrics

@@ -16,6 +16,15 @@ from repro.simx.engine import (
     scan_rounds,
     simulate_workload,
 )
+from repro.simx.faults import (
+    FaultPlan,
+    FaultSchedule,
+    GmOutage,
+    WorkerFailure,
+    empty_schedule,
+    fault_grid_schedule,
+    is_empty,
+)
 from repro.simx.state import (
     EagleState,
     MeghaState,
@@ -29,7 +38,13 @@ from repro.simx.state import (
     init_pigeon_state,
     init_sparrow_state,
 )
-from repro.simx.sweep import fig2_sweep, point_summary, sweep_grid
+from repro.simx.sweep import (
+    fault_sweep_grid,
+    fig2_sweep,
+    fig4_sweep,
+    point_summary,
+    sweep_grid,
+)
 
 __all__ = [
     "SCHEDULERS",
@@ -37,16 +52,25 @@ __all__ = [
     "SimxConfig",
     "TaskArrays",
     "EagleState",
+    "FaultPlan",
+    "FaultSchedule",
+    "GmOutage",
     "MeghaState",
     "PigeonState",
     "SparrowState",
+    "WorkerFailure",
+    "empty_schedule",
     "estimate_rounds",
     "export_workload",
+    "fault_grid_schedule",
+    "fault_sweep_grid",
     "fig2_sweep",
+    "fig4_sweep",
     "init_eagle_state",
     "init_megha_state",
     "init_pigeon_state",
     "init_sparrow_state",
+    "is_empty",
     "point_summary",
     "run_to_completion",
     "scan_rounds",

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.simx.faults import FaultSchedule, apply_worker_faults, worker_dead
 from repro.simx.megha import MatchFn, default_match_fn
 from repro.simx.sparrow import late_bind, probe_mask
 from repro.simx.state import EagleState, SimxConfig, TaskArrays, init_eagle_state
@@ -62,6 +63,7 @@ def make_eagle_step(
     tasks: TaskArrays,
     key: jax.Array,
     match_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
 ) -> Callable[[EagleState], EagleState]:
     """Build the jittable one-round transition function.
 
@@ -70,6 +72,15 @@ def make_eagle_step(
     workers continue their previous job) -> late binding (idle workers
     serve the earliest live reservation) -> central long match -> advance
     the central FIFO head.
+
+    With ``faults``, crashed workers lose their in-flight task (lost long
+    tasks roll the central FIFO head back; lost shorts simply re-pend) and
+    read busy until recovery — the central scheduler's ground-truth match
+    excludes them for free.  SSS additionally rejects probes aimed at dead
+    workers (the RPC would time out), and a short job whose every live
+    reservation died is rescued by any idle worker (see the sparrow rule).
+    ``faults=None`` builds the fault-free program; an empty schedule is
+    bit-identical to it.
     """
     if match_fn is None:
         match_fn = default_match_fn()
@@ -105,6 +116,12 @@ def make_eagle_step(
     )
     submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
     cl_row = jnp.arange(CL, dtype=jnp.int32)
+    if faults is not None:
+        # task -> central-FIFO position for crash-loss head rollback
+        # (short tasks and the T pad map to NL: the min() below ignores them)
+        long_pos_np = np.full(T + 1, NL, np.int32)
+        long_pos_np[long_ids] = np.arange(NL, dtype=np.int32)
+        long_pos = jnp.asarray(long_pos_np)
 
     def apply_launch(launch, task_pick, start, task_finish, worker_finish, worker_task):
         lt = jnp.where(launch, task_pick, T)
@@ -116,26 +133,43 @@ def make_eagle_step(
 
     def step(s: EagleState) -> EagleState:
         t = s.t
-        # -- 0. ground truth (completions are implicit) ---------------------
-        long_here = (s.worker_finish > t) & long_task[s.worker_task]  # bool[W]
-        comp = (s.worker_finish <= t) & (s.worker_finish > t - cfg.dt)
+        # -- 0. fault transitions + ground truth (completions implicit) -----
+        task_finish0, worker_finish0 = s.task_finish, s.worker_finish
+        long_head, lost = s.long_head, s.lost
+        if faults is not None:
+            task_finish0, worker_finish0, lost_w, n_lost = apply_worker_faults(
+                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
+            )
+            lost = lost + n_lost
+            # lost long tasks re-enter the central FIFO: roll the head back
+            lt0 = jnp.where(lost_w, s.worker_task, T)
+            long_head = jnp.minimum(
+                long_head, jnp.min(long_pos[lt0]) if NL else long_head
+            )
+        long_here = (worker_finish0 > t) & long_task[s.worker_task]  # bool[W]
+        comp = (worker_finish0 <= t) & (worker_finish0 > t - cfg.dt)
 
         # -- 1. newly arrived short jobs place probes, SSS re-routing -------
         newly = (tasks.job_submit <= t) & ~s.probed & short_job
         bm = base_mask & newly[:, None]
-        if NL:
-            rej0 = bm & long_here[None, :]
+        if faults is not None:
+            # SSS also bounces probes off dead workers (the RPC times out)
+            sss_reject = long_here | worker_dead(faults, t)
+        else:
+            sss_reject = long_here
+        if NL or faults is not None:
+            rej0 = bm & sss_reject[None, :]
             moved1 = jnp.take_along_axis(
                 rej0, (w_row[None, :] - off1[:, None]) % W, axis=1
             )
-            rej1 = moved1 & long_here[None, :]
+            rej1 = moved1 & sss_reject[None, :]
             tgt2 = (w_row[None, :] + off2[:, None]) % R         # int32[J,W]
             land2 = (
                 jnp.zeros((J, W), jnp.bool_)
                 .at[jnp.broadcast_to(j_col, (J, W)), tgt2]
                 .max(rej1)
             )
-            newrow = (bm & ~long_here[None, :]) | (moved1 & ~long_here[None, :]) | land2
+            newrow = (bm & ~sss_reject[None, :]) | (moved1 & ~sss_reject[None, :]) | land2
             n_rej0 = jnp.sum(rej0, dtype=jnp.int32)
             n_rej1 = jnp.sum(rej1, dtype=jnp.int32)
         else:  # no long jobs in the trace: SSS machinery compiles out
@@ -147,7 +181,7 @@ def make_eagle_step(
         messages = s.messages + n_init + 2 * (n_rej0 + n_rej1)  # reject + resend
 
         # -- 2. sticky batch draining: completed workers keep their job -----
-        pend_task = jnp.isinf(s.task_finish) & (tasks.submit <= t)
+        pend_task = jnp.isinf(task_finish0) & (tasks.submit <= t)
         pending = (
             jnp.zeros(J, jnp.int32).at[tasks.job].add(pend_task.astype(jnp.int32))
         )
@@ -157,7 +191,7 @@ def make_eagle_step(
         launch1, task1 = late_bind(sticky_pick, pend_task, tasks.job, job_start)
         # the worker already holds the job's spec: no extra hops
         task_finish, worker_finish, worker_task = apply_launch(
-            launch1, task1, t, s.task_finish, s.worker_finish, s.worker_task
+            launch1, task1, t, task_finish0, worker_finish0, s.worker_task
         )
 
         # -- 3. late binding: idle workers serve live reservations ----------
@@ -166,7 +200,15 @@ def make_eagle_step(
             jnp.zeros(J, jnp.int32).at[tasks.job].add(pend_task.astype(jnp.int32))
         )
         idle = worker_finish <= t
-        active = reserv & (pending > 0)[:, None]                # bool[J,W]
+        if faults is None:
+            active = reserv & (pending > 0)[:, None]            # bool[J,W]
+        else:
+            # orphan rescue (see the sparrow rule): every reservation dead
+            # -> the short job may be served by any idle worker
+            dead = worker_dead(faults, t)
+            has_live = jnp.any(reserv & ~dead[None, :], axis=1)
+            orphan = (pending > 0) & (s.probed | newly) & ~has_live
+            active = (reserv | orphan[:, None]) & (pending > 0)[:, None]
         job_pick = jnp.min(
             jnp.where(active & idle[None, :], j_col, J), axis=0
         )                                                       # int32[W]
@@ -178,7 +220,6 @@ def make_eagle_step(
         messages = messages + 2 * jnp.sum(launch2, dtype=jnp.int32)
 
         # -- 4. central scheduler: queued long window -> free long partition
-        long_head = s.long_head
         if NL:
             wtask = jax.lax.dynamic_slice(long_fifo, (long_head,), (CL,))
             wsub = submit_pad[jnp.minimum(wtask, T)]
@@ -220,6 +261,7 @@ def make_eagle_step(
             long_head=long_head,
             messages=messages,
             probes=probes,
+            lost=lost,
         )
 
     return step
@@ -231,11 +273,12 @@ def simulate_fixed(
     seed: jax.Array | int,
     num_rounds: int,
     match_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
 ) -> EagleState:
     """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed
     and in the submit-time arrays)."""
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    step = make_eagle_step(cfg, tasks, key, match_fn)
+    step = make_eagle_step(cfg, tasks, key, match_fn, faults=faults)
     state = init_eagle_state(cfg, tasks.num_tasks, tasks.num_jobs)
     state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
     return state

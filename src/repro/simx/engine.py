@@ -52,10 +52,45 @@ module docstrings; these are the eagle/pigeon counterparts):
     drains within the round and a faithful ratio under sustained
     contention.
 
+Fault-injection contract (``faults=``, see ``repro.simx.faults``): fault
+schedules are dense per-worker / per-GM crash and recovery *times*, but
+the round-synchronous engine only observes them at round boundaries, so
+
+  * **Fault-timing quantization** — a crash or recovery taking effect at
+    time ``x`` is applied at the first round boundary ``t >= x`` (up to
+    ``dt`` late, like every other scheduling reaction).  An instant-restart
+    failure (``up == down``) therefore returns the worker at the next
+    boundary rather than immediately.
+  * **Loss granularity** — the in-flight task lost to a crash is re-pended
+    at the crash round and becomes schedulable the same round; the event
+    backend re-queues it one hop after the LM notices.  Schedulers re-serve
+    it through their normal path (megha/pigeon/eagle-long: FIFO-head
+    rollback, so a few rounds may pass before a distant window position is
+    re-examined; sparrow/eagle-short: the pending mask itself).
+  * **Megha GM windows** — a down GM's queue (including arrivals, which
+    round-synchronous execution makes indistinguishable from queued tasks)
+    is matched each round by a live GM chosen round-robin per round,
+    against the *adopter's* eventually-consistent view; the event backend
+    instead resubmits orphaned jobs wholesale and reroutes new arrivals,
+    so under GM faults events re-run already-completed tasks while simx
+    continues partial jobs — aggregate delays track, per-job timings drift
+    by up to the re-run cost.  Recovery resets the GM's view from LM truth
+    in-round (``rebuild_from_heartbeats`` is a message exchange in events).
+  * **Dead-worker visibility** — a down worker reads busy-until-recovery
+    in ground truth; megha's stale views discover this through the normal
+    inconsistency/piggyback/heartbeat machinery, sparrow/eagle reservations
+    on it simply wait (orphaned jobs are rescued by any idle worker), and
+    eagle's SSS bounces probes off it at the arrival round.
+
+An *empty* schedule is bit-identical to the fault-free program (pinned by
+``tests/test_simx_faults.py``).
+
 What this buys: the entire simulation is one compiled program — a Fig. 2
 sweep point at 50k workers is a ``scan`` over dense ``[G, W]`` arrays, and a
-whole (seed x load) grid runs as one ``vmap`` (``repro.simx.sweep``).  See
-``benchmarks/bench_simx.py`` for the events-vs-simx throughput comparison.
+whole (seed x load) grid runs as one ``vmap`` (``repro.simx.sweep``), with
+fault-severity grids (Fig. 4) vmapping the same way over schedule leaves
+(``repro.simx.sweep.fig4_sweep``).  See ``benchmarks/bench_simx.py`` for
+the events-vs-simx throughput comparison and the ``--faults`` grid.
 """
 
 from __future__ import annotations
@@ -71,6 +106,7 @@ import numpy as np
 from repro.core.base import LONG_JOB_THRESHOLD
 from repro.core.megha import grid_workers
 from repro.core.metrics import JobRecord, RunMetrics, TaskRecord, classify_long
+from repro.simx.faults import FaultPlan, FaultSchedule, is_empty
 from repro.simx import eagle as simx_eagle
 from repro.simx import megha as simx_megha
 from repro.simx import pigeon as simx_pigeon
@@ -167,6 +203,11 @@ class SimxRun:
     @property
     def tasks_completed(self) -> int:
         return int(jnp.sum(self.state.task_finish <= self.state.t))
+
+    @property
+    def lost_tasks(self) -> int:
+        """In-flight tasks lost to worker crashes (each re-ran elsewhere)."""
+        return int(self.state.lost)
 
     def job_finish_times(self) -> np.ndarray:
         """float64[J] job finish (max task finish; nan if any task unfinished)."""
@@ -280,13 +321,17 @@ def simulate_workload(
     until: Optional[float] = None,
     use_pallas: bool = False,
     interpret: bool = True,
+    faults: FaultSchedule | FaultPlan | None = None,
 ) -> SimxRun:
     """Run one (scheduler, workload) simx simulation to completion.
 
     Mirrors ``sim.simulator.run_simulation`` semantics; ``until`` caps the
     simulated time span instead of running until all tasks finish.
     Scheduler-specific knobs carry the event backend's names and defaults
-    (``weight`` maps to ``SimxConfig.wfq_weight``).
+    (``weight`` maps to ``SimxConfig.wfq_weight``).  ``faults`` injects a
+    fault schedule (a dense ``FaultSchedule`` or a backend-neutral
+    ``FaultPlan``) into the compiled round step — see the module docstring
+    for the fault-timing contract.
     """
     name = scheduler.lower()
     if name not in SCHEDULERS:
@@ -311,23 +356,48 @@ def simulate_workload(
         dt=dt,
         seed=seed,
     )
+    if isinstance(faults, FaultPlan):
+        faults = faults.to_schedule(num_workers, num_gms, dt)
+    if faults is not None:
+        if faults.worker_down.shape != (num_workers,):
+            raise ValueError(
+                f"fault schedule covers {faults.worker_down.shape[0]} workers, "
+                f"simulation has {num_workers} (megha shaves to the GM x LM "
+                "grid — build the schedule from grid_workers(num_workers))"
+            )
+        if name == "megha" and faults.gm_down.shape != (num_gms,):
+            raise ValueError(
+                f"fault schedule covers {faults.gm_down.shape[0]} GMs, "
+                f"simulation has {num_gms}"
+            )
+        if is_empty(faults):
+            faults = None  # the no-op schedule: build the plain program
     key = jax.random.PRNGKey(seed)
     match_fn = simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret)
     if name == "megha":
         orders = simx_megha.gm_orders(key, cfg)
-        step = simx_megha.make_megha_step(cfg, tasks, orders, match_fn)
+        step = simx_megha.make_megha_step(cfg, tasks, orders, match_fn, faults=faults)
         state = init_megha_state(cfg, tasks.num_tasks)
     elif name == "sparrow":
         probes = simx_sparrow.probe_mask(key, cfg, tasks)
-        step = simx_sparrow.make_sparrow_step(cfg, tasks, probes)
+        step = simx_sparrow.make_sparrow_step(cfg, tasks, probes, faults=faults)
         state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
     elif name == "eagle":
-        step = simx_eagle.make_eagle_step(cfg, tasks, key, match_fn)
+        step = simx_eagle.make_eagle_step(cfg, tasks, key, match_fn, faults=faults)
         state = init_eagle_state(cfg, tasks.num_tasks, tasks.num_jobs)
     else:
-        step = simx_pigeon.make_pigeon_step(cfg, tasks, match_fn)
+        step = simx_pigeon.make_pigeon_step(cfg, tasks, match_fn, faults=faults)
         state = init_pigeon_state(cfg, tasks.num_tasks)
     cap = max_rounds if max_rounds is not None else estimate_rounds(cfg, tasks)
+    if max_rounds is None and faults is not None:
+        # outages park work until recovery: extend the horizon past the last
+        # finite recovery plus a drain allowance for the re-run tasks
+        ups = np.concatenate(
+            [np.asarray(faults.worker_up).ravel(), np.asarray(faults.gm_up).ravel()]
+        )
+        finite = ups[np.isfinite(ups)]
+        if finite.size:
+            cap += int(math.ceil(float(finite.max()) / dt)) + cfg.heartbeat_rounds
     if until is not None:
         cap = min(cap, int(math.ceil(until / dt)))
     state = run_to_completion(step, state, chunk=chunk, max_rounds=cap)

@@ -35,6 +35,13 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.match import match_ranks_batched
+from repro.simx.faults import (
+    FaultSchedule,
+    apply_worker_faults,
+    gm_adoption,
+    gm_down_mask,
+    gm_recovered_now,
+)
 from repro.simx.state import MeghaState, SimxConfig, TaskArrays, init_megha_state
 
 MatchFn = Callable[[jax.Array, jax.Array], jax.Array]
@@ -77,6 +84,7 @@ def make_megha_step(
     tasks: TaskArrays,
     orders: jax.Array,
     match_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
 ) -> Callable[[MeghaState], MeghaState]:
     """Build the jittable one-round transition function.
 
@@ -98,6 +106,16 @@ def make_megha_step(
         only on rounds where a GM's queue outruns its internal free view;
       * GM->worker coordinate conversion goes through precomputed inverse
         permutations (gathers), never scatters.
+
+    With ``faults`` (a ``repro.simx.faults.FaultSchedule``) the round gains
+    the §3.5 masked fault transitions: crashed workers lose their in-flight
+    task (re-pended, GM FIFO head rolled back) and read busy until their
+    recovery time — stale views keep proposing onto them until heartbeats /
+    piggybacks repair the inconsistency; down GMs stop matching and their
+    queues are adopted round-robin by live GMs matching against their own
+    views (arrival rerouting); a recovering GM's view resets from LM ground
+    truth (``rebuild_from_heartbeats``).  ``faults=None`` builds exactly
+    the fault-free program, and an *empty* schedule is bit-identical to it.
     """
     if match_fn is None:
         match_fn = default_match_fn()
@@ -123,10 +141,19 @@ def make_megha_step(
     C = min(C, tg)
     # pad with C sentinels so the head window never slices out of bounds
     gm_tasks_np = np.full((G, tg + C), T, np.int32)
+    task_pos_np = np.zeros(T + 1, np.int32)            # task -> window position
     for g in range(G):
         mine = np.nonzero(task_gm == g)[0]
         gm_tasks_np[g, : mine.size] = mine
+        task_pos_np[mine] = np.arange(mine.size, dtype=np.int32)
     gm_tasks = jnp.asarray(gm_tasks_np)                # int32[G,Tg+C]
+    if faults is not None:
+        # task -> (gm row, FIFO position) for crash-loss head rollback;
+        # the T pad rows route to the out-of-bounds row G (scatter-dropped)
+        task_gm_pad = jnp.concatenate(
+            [jnp.asarray(task_gm, jnp.int32), jnp.int32([G])]
+        )
+        task_pos_pad = jnp.asarray(task_pos_np)
     # task submit times in the padded compact layout (sentinel -> inf)
     submit_c = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])[gm_tasks]
     win = jnp.arange(C, dtype=jnp.int32)[None, :]      # int32[1,C]
@@ -146,7 +173,7 @@ def make_megha_step(
         )
 
     def launch_updates(t, launch_w, task_w, gm_w, task_finish, worker_finish,
-                       worker_gm, worker_borrowed):
+                       worker_task, worker_gm, worker_borrowed):
         """Apply one phase's launches ([W]-space masks) to the task/worker
         state.  start = round time + client->GM + GM->LM + LM->worker hops."""
         start = t + 3 * cfg.hop
@@ -154,41 +181,81 @@ def make_megha_step(
         fin = start + dur_pad[jnp.minimum(task_w, T)]
         task_finish = task_finish.at[lt].set(fin, mode="drop")
         worker_finish = jnp.where(launch_w, fin, worker_finish)
+        worker_task = jnp.where(launch_w, task_w, worker_task)
         worker_gm = jnp.where(launch_w, gm_w, worker_gm)
         worker_borrowed = jnp.where(launch_w, part_gm != gm_w, worker_borrowed)
-        return task_finish, worker_finish, worker_gm, worker_borrowed
+        return task_finish, worker_finish, worker_task, worker_gm, worker_borrowed
 
-    def piggyback(view, truth, invalid_gl):
+    def piggyback(view, truth, invalid_gl, adopt=None):
         """Refresh GM g's view of every LM that rejected one of its
-        proposals with that LM's fresh ground truth (§3.4.1)."""
+        proposals with that LM's fresh ground truth (§3.4.1).  Under GM
+        adoption the refresh lands on the *adopter's* view (it made the
+        proposal); ``adopt`` is the identity without down GMs, so the
+        scatter reduces to the plain row-local refresh."""
+        if adopt is not None:
+            invalid_gl = jnp.zeros_like(invalid_gl).at[adopt].max(invalid_gl)
         refresh = jnp.repeat(invalid_gl, wpl, axis=1)             # bool[G,W]
         return jnp.where(refresh, truth[None, :], view)
 
     def step(s: MeghaState) -> MeghaState:
         t = s.t
+        # -- 0. fault transitions (round start) -----------------------------
+        task_finish0, worker_finish0 = s.task_finish, s.worker_finish
+        head0, lost = s.head, s.lost
+        if faults is not None:
+            task_finish0, worker_finish0, lost_w, n_lost = apply_worker_faults(
+                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
+            )
+            lost = lost + n_lost
+            # re-enqueue lost tasks: roll each GM's FIFO head back to the
+            # earliest lost position (re-examined over the coming rounds)
+            lt0 = jnp.where(lost_w, s.worker_task, T)
+            head0 = head0.at[task_gm_pad[lt0]].min(
+                task_pos_pad[lt0], mode="drop"
+            )
+
         # -- 1. completions -------------------------------------------------
         # a worker completes this round iff its finish time fell in the round
         # window just ended; task_finish was already recorded at launch
-        truth = s.worker_finish <= t                   # bool[W] ground truth
-        comp = truth & (s.worker_finish > t - cfg.dt)
+        truth = worker_finish0 <= t                    # bool[W] ground truth
+        comp = truth & (worker_finish0 > t - cfg.dt)
         regain = ((s.worker_gm[None, :] == g_col) & (comp & ~s.worker_borrowed))
         view = s.view | regain
         messages = s.messages + jnp.sum(comp, dtype=jnp.int32)  # LM -> GM
 
-        # -- 2. heartbeat ---------------------------------------------------
-        do_hb = (s.rnd % hb) == (hb - 1)
-        view = jnp.where(do_hb, truth[None, :], view)
-        messages = messages + jnp.where(do_hb, G * L, 0).astype(jnp.int32)
+        # -- 2. heartbeat (+ GM down windows / recovery resets) -------------
+        if faults is None:
+            do_hb = (s.rnd % hb) == (hb - 1)
+            view = jnp.where(do_hb, truth[None, :], view)
+            messages = messages + jnp.where(do_hb, G * L, 0).astype(jnp.int32)
+            adopt = None
+        else:
+            hb_eff = hb + faults.hb_extra_rounds       # delay perturbation
+            do_hb = (s.rnd % hb_eff) == (hb_eff - 1)
+            adopt, row_active, n_live = gm_adoption(
+                gm_down_mask(faults, t), s.rnd
+            )
+            view = jnp.where(do_hb, truth[None, :], view)
+            messages = messages + jnp.where(do_hb, n_live * L, 0).astype(
+                jnp.int32
+            )
+            # §3.5 recovery: a returning GM rebuilds its view from LM truth
+            rec = gm_recovered_now(faults, t, cfg.dt)
+            view = jnp.where(rec[:, None], truth[None, :], view)
+            messages = messages + L * jnp.sum(rec, dtype=jnp.int32)
 
         # -- 3. internal match (FIFO windows, [G, W/G] arrays) --------------
-        wtask = slice_rows(gm_tasks, s.head, C)                   # int32[G,C]
-        wsubmit = slice_rows(submit_c, s.head, C)                 # float32[G,C]
-        fpad = jnp.concatenate([s.task_finish, jnp.float32([-jnp.inf])])
+        wtask = slice_rows(gm_tasks, head0, C)                    # int32[G,C]
+        wsubmit = slice_rows(submit_c, head0, C)                  # float32[G,C]
+        fpad = jnp.concatenate([task_finish0, jnp.float32([-jnp.inf])])
         launched_w = ~jnp.isinf(fpad[wtask]) | (wtask >= T)       # bool[G,C]
         queued_w = ~launched_w & (wsubmit <= t)                   # bool[G,C]
+        if faults is not None:
+            queued_w = queued_w & row_active[:, None]  # frozen when no GM live
         nq = jnp.sum(queued_w, axis=1, dtype=jnp.int32)           # int32[G]
         fifo = fifo_of(queued_w)                                  # int32[G,C]
-        avail_int = view[g_col, int_ord]                          # bool[G,wi]
+        view_eff = view if adopt is None else view[adopt]
+        avail_int = view_eff[g_col, int_ord]                      # bool[G,wi]
         ranks_i = match_fn(avail_int, nq)                         # int32[G,wi]
         sel_pos = jnp.take_along_axis(
             fifo, jnp.clip(ranks_i, 0, C - 1), axis=1
@@ -205,9 +272,11 @@ def make_megha_step(
         # flat (g, i) -> worker coordinates via the static inverse perm
         launch_w = launch_i.reshape(-1)[inv_int]                  # bool[W]
         task_w = jnp.where(launch_w, sel_task_i.reshape(-1)[inv_int], T)
-        task_finish, worker_finish, worker_gm, worker_borrowed = launch_updates(
+        (task_finish, worker_finish, worker_task, worker_gm,
+         worker_borrowed) = launch_updates(
             t, launch_w, task_w, part_gm,
-            s.task_finish, s.worker_finish, s.worker_gm, s.worker_borrowed,
+            task_finish0, worker_finish0, s.worker_task,
+            s.worker_gm, s.worker_borrowed,
         )
         truth = truth & ~launch_w
         # the proposing GM marks every proposed internal worker busy in its
@@ -216,7 +285,7 @@ def make_megha_step(
         view = view & ~(proposed_own[None, :] & (part_gm[None, :] == g_col))
         inconsistencies = s.inconsistencies + jnp.sum(invalid_i, dtype=jnp.int32)
         inval_gl = (invalid_i[:, :, None] & (lm_int[:, :, None] == l_row)).any(axis=1)
-        view = piggyback(view, truth, inval_gl)
+        view = piggyback(view, truth, inval_gl, adopt)
         batch_gl = (proposed_i[:, :, None] & (lm_int[:, :, None] == l_row)).any(axis=1)
         messages = messages + 2 * jnp.sum(batch_gl, dtype=jnp.int32)
 
@@ -226,14 +295,17 @@ def make_megha_step(
         need_borrow = jnp.any(nq > placed_i)
 
         def borrow(args):
-            (view, truth, task_finish, worker_finish, worker_gm,
+            (view, truth, task_finish, worker_finish, worker_task, worker_gm,
              worker_borrowed, inconsistencies, repartitions, messages) = args
             fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
             launched2 = ~jnp.isinf(fpad2[wtask]) | (wtask >= T)
             queued2 = ~launched2 & (wsubmit <= t)
+            if faults is not None:
+                queued2 = queued2 & row_active[:, None]
             nq2 = jnp.sum(queued2, axis=1, dtype=jnp.int32)
             fifo2 = fifo_of(queued2)
-            avail_ord = jnp.take_along_axis(view, orders, axis=1)  # bool[G,W]
+            view_b = view if adopt is None else view[adopt]
+            avail_ord = jnp.take_along_axis(view_b, orders, axis=1)  # bool[G,W]
             ranks = match_fn(avail_ord, nq2)                       # int32[G,W]
             sel_pos2 = jnp.take_along_axis(
                 fifo2, jnp.clip(ranks, 0, C - 1), axis=1
@@ -260,27 +332,31 @@ def make_megha_step(
             win_g = jnp.where(any_prop, win_enc % G, 0)
             launch = any_prop & truth                              # bool[W]
             win_task = jnp.where(launch, prop[win_g, w_row], T)
-            task_finish, worker_finish, worker_gm, worker_borrowed = (
-                launch_updates(
-                    t, launch, win_task, win_g,
-                    task_finish, worker_finish, worker_gm, worker_borrowed,
-                )
+            (task_finish, worker_finish, worker_task, worker_gm,
+             worker_borrowed) = launch_updates(
+                t, launch, win_task, win_g,
+                task_finish, worker_finish, worker_task,
+                worker_gm, worker_borrowed,
             )
             truth = truth & ~launch
             view = view & ~proposed
             launched_by_g = launch[None, :] & (g_col == win_g[None, :])
             invalid = proposed & ~launched_by_g                    # bool[G,W]
             inconsistencies = inconsistencies + jnp.sum(invalid, dtype=jnp.int32)
-            view = piggyback(view, truth, invalid.reshape(G, L, wpl).any(axis=2))
+            view = piggyback(
+                view, truth, invalid.reshape(G, L, wpl).any(axis=2), adopt
+            )
             batch2 = proposed.reshape(G, L, wpl).any(axis=2)
             messages = messages + 2 * jnp.sum(batch2, dtype=jnp.int32)
-            return (view, truth, task_finish, worker_finish, worker_gm,
-                    worker_borrowed, inconsistencies, repartitions, messages)
+            return (view, truth, task_finish, worker_finish, worker_task,
+                    worker_gm, worker_borrowed, inconsistencies, repartitions,
+                    messages)
 
-        carry = (view, truth, task_finish, worker_finish, worker_gm,
-                 worker_borrowed, inconsistencies, s.repartitions, messages)
-        (view, truth, task_finish, worker_finish, worker_gm, worker_borrowed,
-         inconsistencies, repartitions, messages) = jax.lax.cond(
+        carry = (view, truth, task_finish, worker_finish, worker_task,
+                 worker_gm, worker_borrowed, inconsistencies, s.repartitions,
+                 messages)
+        (view, truth, task_finish, worker_finish, worker_task, worker_gm,
+         worker_borrowed, inconsistencies, repartitions, messages) = jax.lax.cond(
             need_borrow, borrow, lambda a: a, carry
         )
 
@@ -290,7 +366,7 @@ def make_megha_step(
         lead = jnp.sum(
             jnp.cumprod(launched3.astype(jnp.int32), axis=1), axis=1
         )                                                          # int32[G]
-        head = jnp.minimum(s.head + lead, tg)
+        head = jnp.minimum(head0 + lead, tg)
 
         return s.replace(
             t=t + cfg.dt,
@@ -298,12 +374,14 @@ def make_megha_step(
             task_finish=task_finish,
             head=head,
             worker_finish=worker_finish,
+            worker_task=worker_task,
             worker_gm=worker_gm,
             worker_borrowed=worker_borrowed,
             view=view,
             inconsistencies=inconsistencies,
             repartitions=repartitions,
             messages=messages,
+            lost=lost,
         )
 
     return step
@@ -315,13 +393,14 @@ def simulate_fixed(
     seed: jax.Array | int,
     num_rounds: int,
     match_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
 ) -> MeghaState:
     """Run exactly ``num_rounds`` rounds from a fresh DC — a pure function of
-    ``seed``, so an entire sweep grid runs as ``jax.vmap(simulate_fixed, ...)``
-    in one compiled program."""
+    ``seed`` (and the ``faults`` leaves), so an entire sweep grid runs as
+    ``jax.vmap(simulate_fixed, ...)`` in one compiled program."""
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
     orders = gm_orders(key, cfg)
-    step = make_megha_step(cfg, tasks, orders, match_fn)
+    step = make_megha_step(cfg, tasks, orders, match_fn, faults=faults)
     state = init_megha_state(cfg, tasks.num_tasks)
     state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
     return state

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.simx.faults import FaultSchedule, apply_worker_faults
 from repro.simx.megha import MatchFn, default_match_fn
 from repro.simx.state import PigeonState, SimxConfig, TaskArrays, init_pigeon_state
 
@@ -62,12 +63,24 @@ def make_pigeon_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
     match_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
 ) -> Callable[[PigeonState], PigeonState]:
     """Build the jittable one-round transition function.
 
     Round order: completions (implicit via ``worker_finish``) -> WFQ split
     of each group's free unreserved workers between its high/low queue
     heads -> high overflow onto reserved workers -> launch + head advance.
+
+    With ``faults``, crashed workers lose their in-flight task (the group's
+    high/low head rolls back so the FIFO re-examines it) and read busy
+    until recovery, which shrinks the group's capacity — tasks can NOT
+    migrate groups (the pathology megha fixes), so a decimated group
+    queues until its workers return.  Because rolled-back windows contain
+    already-launched tasks, the fault build swaps the submitted-prefix
+    queue count for an explicit unlaunched mask + sorted FIFO positions
+    and advances heads past the launched prefix (megha's window idiom);
+    without rollbacks both forms coincide, so an empty schedule stays
+    bit-identical to the ``faults=None`` program.
     """
     if match_fn is None:
         match_fn = default_match_fn()
@@ -93,12 +106,15 @@ def make_pigeon_step(
     high_task = np.asarray(tasks.job_est)[np.asarray(tasks.job)] < cfg.long_threshold
     C = max(S, 1)  # window width: a group launches at most S tasks per round
 
+    task_pos_np = np.zeros(T + 1, np.int32)  # task -> position in its FIFO
+
     def layout(mask: np.ndarray) -> jax.Array:
         length = int(np.max(np.bincount(gt[mask], minlength=NG))) if mask.any() else 0
         rows = np.full((NG, length + C), T, np.int32)
         for g in range(NG):
             mine = np.nonzero(mask & (gt == g))[0]
             rows[g, : mine.size] = mine
+            task_pos_np[mine] = np.arange(mine.size, dtype=np.int32)
         return jnp.asarray(rows)
 
     high_fifo = layout(high_task)      # int32[NG, Lh+C], ids ascending = FIFO
@@ -108,6 +124,15 @@ def make_pigeon_step(
     submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
     dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
     wf_pad_inf = jnp.float32([jnp.inf])
+    if faults is not None:
+        # task -> (group, FIFO position, class) for crash-loss head rollback;
+        # the T pad routes to the out-of-bounds group NG (scatter-dropped)
+        task_pos_pad = jnp.asarray(task_pos_np)
+        grp_pad = jnp.concatenate([jnp.asarray(gt, jnp.int32), jnp.int32([NG])])
+        high_pad = jnp.concatenate(
+            [jnp.asarray(high_task), jnp.zeros(1, jnp.bool_)]
+        )
+        c_row = jnp.arange(C, dtype=jnp.int32)[None, :]
 
     def slice_rows(mat, starts, width):
         return jax.vmap(
@@ -122,10 +147,43 @@ def make_pigeon_step(
         wsub = jnp.where(wtask >= T, jnp.inf, submit_pad[jnp.minimum(wtask, T)])
         return wtask, jnp.sum(wsub <= t, axis=1, dtype=jnp.int32)
 
+    def window_fault(fifo, heads, t, task_finish):
+        """Fault-mode window: a rolled-back head re-examines launched tasks,
+        so 'queued' needs the explicit unlaunched mask and rank -> task
+        goes through sorted queued positions (megha's FIFO recovery)."""
+        wtask = slice_rows(fifo, heads, C)                      # int32[NG,C]
+        wsub = jnp.where(wtask >= T, jnp.inf, submit_pad[jnp.minimum(wtask, T)])
+        fpad = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+        launched = ~jnp.isinf(fpad[wtask])                      # pad: False
+        queued = ~launched & (wsub <= t)
+        fifo_pos = jnp.sort(
+            jnp.where(queued, jnp.broadcast_to(c_row, queued.shape), C), axis=1
+        )
+        return wtask, jnp.sum(queued, axis=1, dtype=jnp.int32), fifo_pos
+
     def step(s: PigeonState) -> PigeonState:
         t = s.t
-        # -- 1. free capacity per group (completions implicit) --------------
-        wf_g = jnp.concatenate([s.worker_finish, wf_pad_inf])[wg]  # [NG,S]
+        # -- 0. fault transitions (round start) -----------------------------
+        task_finish0, worker_finish0 = s.task_finish, s.worker_finish
+        high_head0, low_head0, lost = s.high_head, s.low_head, s.lost
+        if faults is not None:
+            task_finish0, worker_finish0, lost_w, n_lost = apply_worker_faults(
+                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
+            )
+            lost = lost + n_lost
+            # re-enqueue lost tasks: roll the owning group's class FIFO back
+            lt0 = jnp.where(lost_w, s.worker_task, T)
+            g0, p0, hi0 = grp_pad[lt0], task_pos_pad[lt0], high_pad[lt0]
+            high_head0 = high_head0.at[jnp.where(hi0, g0, NG)].min(
+                p0, mode="drop"
+            )
+            low_head0 = low_head0.at[jnp.where(hi0, NG, g0)].min(
+                p0, mode="drop"
+            )
+
+        # -- 1. free capacity per group (completions implicit; a crashed
+        #       worker holds its recovery time, shrinking group capacity) ---
+        wf_g = jnp.concatenate([worker_finish0, wf_pad_inf])[wg]   # [NG,S]
         free = wf_g <= t
         free_u = free & ~reserved
         free_r = free & reserved
@@ -133,8 +191,12 @@ def make_pigeon_step(
         nfr = jnp.sum(free_r, axis=1, dtype=jnp.int32)
 
         # -- 2. queued counts + WFQ split of unreserved capacity ------------
-        wh, qh = window(high_fifo, s.high_head, t)
-        wl, ql = window(low_fifo, s.low_head, t)
+        if faults is None:
+            wh, qh = window(high_fifo, high_head0, t)
+            wl, ql = window(low_fifo, low_head0, t)
+        else:
+            wh, qh, fifo_h = window_fault(high_fifo, high_head0, t, task_finish0)
+            wl, ql, fifo_l = window_fault(low_fifo, low_head0, t, task_finish0)
         total_u = jnp.minimum(nfu, qh + ql)
         lead = jnp.maximum(0, weight - s.since_low)  # highs before first low
         low_wfq = jnp.where(
@@ -147,37 +209,67 @@ def make_pigeon_step(
 
         # -- 3. rank-and-select free workers, map ranks to FIFO positions ---
         ranks_u = match_fn(free_u, n_high_u + n_low)               # int32[NG,S]
-        ru = jnp.clip(ranks_u, 0, C - 1)
-        task_u = jnp.where(
-            ranks_u < 0,
-            T,
-            jnp.where(
-                ranks_u < n_high_u[:, None],
-                jnp.take_along_axis(wh, ru, axis=1),
-                jnp.take_along_axis(
-                    wl, jnp.clip(ranks_u - n_high_u[:, None], 0, C - 1), axis=1
-                ),
-            ),
-        )
         ranks_r = match_fn(free_r, n_high_r)
-        task_r = jnp.where(
-            ranks_r < 0,
-            T,
-            jnp.take_along_axis(
-                wh, jnp.clip(n_high_u[:, None] + ranks_r, 0, C - 1), axis=1
-            ),
-        )
+        if faults is None:
+            # no holes: the r-th queued task sits at window position r
+            ru = jnp.clip(ranks_u, 0, C - 1)
+            task_u = jnp.where(
+                ranks_u < 0,
+                T,
+                jnp.where(
+                    ranks_u < n_high_u[:, None],
+                    jnp.take_along_axis(wh, ru, axis=1),
+                    jnp.take_along_axis(
+                        wl, jnp.clip(ranks_u - n_high_u[:, None], 0, C - 1), axis=1
+                    ),
+                ),
+            )
+            task_r = jnp.where(
+                ranks_r < 0,
+                T,
+                jnp.take_along_axis(
+                    wh, jnp.clip(n_high_u[:, None] + ranks_r, 0, C - 1), axis=1
+                ),
+            )
+        else:
+            # rank -> sorted queued position -> window task id
+            pos_uh = jnp.take_along_axis(
+                fifo_h, jnp.clip(ranks_u, 0, C - 1), axis=1
+            )
+            pos_ul = jnp.take_along_axis(
+                fifo_l, jnp.clip(ranks_u - n_high_u[:, None], 0, C - 1), axis=1
+            )
+            task_u = jnp.where(
+                ranks_u < 0,
+                T,
+                jnp.where(
+                    ranks_u < n_high_u[:, None],
+                    jnp.take_along_axis(wh, jnp.clip(pos_uh, 0, C - 1), axis=1),
+                    jnp.take_along_axis(wl, jnp.clip(pos_ul, 0, C - 1), axis=1),
+                ),
+            )
+            pos_r = jnp.take_along_axis(
+                fifo_h, jnp.clip(n_high_u[:, None] + ranks_r, 0, C - 1), axis=1
+            )
+            task_r = jnp.where(
+                ranks_r < 0,
+                T,
+                jnp.take_along_axis(wh, jnp.clip(pos_r, 0, C - 1), axis=1),
+            )
         task_g = jnp.minimum(task_u, task_r)  # disjoint slots: one is T
         launch = task_g < T                                         # [NG,S]
 
         # -- 4. launch: client->distributor->coordinator->worker = 3 hops ---
         start = t + 3 * cfg.hop
         fin = start + dur_pad[jnp.minimum(task_g, T)]
-        task_finish = s.task_finish.at[jnp.where(launch, task_g, T)].set(
+        task_finish = task_finish0.at[jnp.where(launch, task_g, T)].set(
             fin, mode="drop"
         )
-        worker_finish = s.worker_finish.at[jnp.where(launch, wg, W)].set(
+        worker_finish = worker_finish0.at[jnp.where(launch, wg, W)].set(
             fin, mode="drop"
+        )
+        worker_task = s.worker_task.at[jnp.where(launch, wg, W)].set(
+            task_g, mode="drop"
         )
         # messages: one distributor->coordinator per arriving task, one
         # coordinator->worker per launch
@@ -188,15 +280,37 @@ def make_pigeon_step(
             s.messages + arrived + jnp.sum(launch, dtype=jnp.int32)
         )
 
+        # -- 5. head advance ------------------------------------------------
+        if faults is None:
+            # strict FIFO launches: advance by the launch counts
+            high_head = jnp.minimum(high_head0 + n_high_u + n_high_r, len_h)
+            low_head = jnp.minimum(low_head0 + n_low, len_l)
+        else:
+            # rolled-back windows have holes: advance past the launched
+            # prefix instead (equals the counts whenever there are none)
+            fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+            lead_h = jnp.sum(
+                jnp.cumprod((~jnp.isinf(fpad2[wh])).astype(jnp.int32), axis=1),
+                axis=1,
+            )
+            lead_l = jnp.sum(
+                jnp.cumprod((~jnp.isinf(fpad2[wl])).astype(jnp.int32), axis=1),
+                axis=1,
+            )
+            high_head = jnp.minimum(high_head0 + lead_h, len_h)
+            low_head = jnp.minimum(low_head0 + lead_l, len_l)
+
         return s.replace(
             t=t + cfg.dt,
             rnd=s.rnd + 1,
             task_finish=task_finish,
             worker_finish=worker_finish,
-            high_head=jnp.minimum(s.high_head + n_high_u + n_high_r, len_h),
-            low_head=jnp.minimum(s.low_head + n_low, len_l),
+            worker_task=worker_task,
+            high_head=high_head,
+            low_head=low_head,
             since_low=since_low,
             messages=messages,
+            lost=lost,
         )
 
     return step
@@ -208,12 +322,13 @@ def simulate_fixed(
     seed: jax.Array | int,
     num_rounds: int,
     match_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
 ) -> PigeonState:
     """Run exactly ``num_rounds`` rounds from an idle DC.  Pigeon's
     transition is deterministic given the trace; ``seed`` is accepted for
     signature parity with the other schedulers (vmap-able all the same)."""
     del seed  # no randomized state: distribution is static round-robin
-    step = make_pigeon_step(cfg, tasks, match_fn)
+    step = make_pigeon_step(cfg, tasks, match_fn, faults=faults)
     state = init_pigeon_state(cfg, tasks.num_tasks)
     state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
     return state

@@ -29,6 +29,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.simx.faults import FaultSchedule, apply_worker_faults, worker_dead
 from repro.simx.state import SimxConfig, SparrowState, TaskArrays, init_sparrow_state
 
 
@@ -89,9 +90,22 @@ def probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.Array:
 
 
 def make_sparrow_step(
-    cfg: SimxConfig, tasks: TaskArrays, probes: jax.Array
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    probes: jax.Array,
+    faults: FaultSchedule | None = None,
 ) -> Callable[[SparrowState], SparrowState]:
-    """Build the jittable one-round transition function."""
+    """Build the jittable one-round transition function.
+
+    With ``faults``, crashed workers lose their in-flight task (it simply
+    re-pends — late binding has no head pointer to roll back) and read
+    busy until recovery, so they never serve reservations; a job whose
+    every probed worker is currently dead is *orphaned* and temporarily
+    served by any idle worker (the round-space stand-in for re-probing
+    after RPC timeouts — without it a never-recovering probe set would
+    strand the job).  ``faults=None`` builds the fault-free program; an
+    empty schedule is bit-identical to it.
+    """
     W = cfg.num_workers
     T = tasks.num_tasks
     J = tasks.num_jobs
@@ -107,6 +121,12 @@ def make_sparrow_step(
         t = s.t
         # completions are implicit: a worker is idle iff worker_finish <= t,
         # and task_finish was recorded at launch
+        task_finish0, worker_finish0, lost = s.task_finish, s.worker_finish, s.lost
+        if faults is not None:
+            task_finish0, worker_finish0, _, n_lost = apply_worker_faults(
+                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
+            )
+            lost = lost + n_lost
 
         # -- 1. new arrivals place their probes -----------------------------
         job_seen = tasks.job_submit <= t                            # bool[J]
@@ -121,16 +141,29 @@ def make_sparrow_step(
         messages = s.messages + n_probes
 
         # -- 2. late binding: idle workers serve reservations ---------------
-        pend_task = jnp.isinf(s.task_finish) & (tasks.submit <= t)  # bool[T]
+        pend_task = jnp.isinf(task_finish0) & (tasks.submit <= t)   # bool[T]
         pending = (
             jnp.zeros(J, jnp.int32)
             .at[tasks.job]
             .add(pend_task.astype(jnp.int32))
         )                                                           # int32[J]
-        active = probes & (pending > 0)[:, None] & job_seen[:, None]  # [J,W]
+        if faults is None:
+            active = probes & (pending > 0)[:, None] & job_seen[:, None]
+        else:
+            # orphan rescue: a pending job with every probed worker dead may
+            # be served by any idle worker (dead workers themselves never
+            # serve: worker_finish holds their recovery time)
+            dead = worker_dead(faults, t)                           # bool[W]
+            has_live = jnp.any(probes & ~dead[None, :], axis=1)     # bool[J]
+            orphan = job_seen & (pending > 0) & ~has_live
+            active = (
+                (probes | orphan[:, None])
+                & (pending > 0)[:, None]
+                & job_seen[:, None]
+            )
         # FIFO reservation queue: earliest job (lowest index) wins the worker
         job_pick = jnp.min(jnp.where(active, j_col, J), axis=0)     # int32[W]
-        idle = s.worker_finish <= t
+        idle = worker_finish0 <= t
         launch, task_pick = late_bind(
             jnp.where(idle, job_pick, J), pend_task, tasks.job, job_start
         )
@@ -138,8 +171,9 @@ def make_sparrow_step(
         # client->scheduler hop + worker->scheduler get-task RPC round trip
         start = t + 3 * cfg.hop
         dur = tasks.duration[jnp.clip(task_pick, 0, T - 1)]
-        task_finish = s.task_finish.at[lt].set(start + dur, mode="drop")
-        worker_finish = jnp.where(launch, start + dur, s.worker_finish)
+        task_finish = task_finish0.at[lt].set(start + dur, mode="drop")
+        worker_finish = jnp.where(launch, start + dur, worker_finish0)
+        worker_task = jnp.where(launch, task_pick, s.worker_task)
         messages = messages + 2 * jnp.sum(launch, dtype=jnp.int32)  # RPC + reply
 
         return s.replace(
@@ -147,9 +181,11 @@ def make_sparrow_step(
             rnd=s.rnd + 1,
             task_finish=task_finish,
             worker_finish=worker_finish,
+            worker_task=worker_task,
             probed=s.probed | newly,
             probes=probes_ctr,
             messages=messages,
+            lost=lost,
         )
 
     return step
@@ -160,10 +196,11 @@ def simulate_fixed(
     tasks: TaskArrays,
     seed: jax.Array | int,
     num_rounds: int,
+    faults: FaultSchedule | None = None,
 ) -> SparrowState:
     """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed)."""
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    step = make_sparrow_step(cfg, tasks, probe_mask(key, cfg, tasks))
+    step = make_sparrow_step(cfg, tasks, probe_mask(key, cfg, tasks), faults=faults)
     state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
     state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
     return state

@@ -167,10 +167,15 @@ def _common_fields(cfg: SimxConfig, num_tasks: int) -> dict:
         task_finish=jnp.full(num_tasks, jnp.inf, jnp.float32),
         # a worker is free iff worker_finish <= t; -inf = never ran anything
         worker_finish=jnp.full(w, -jnp.inf, jnp.float32),
+        # last task launched here (T = none) — drives eagle's sticky/SSS
+        # rules and identifies the in-flight task lost when a worker
+        # crashes (repro.simx.faults)
+        worker_task=jnp.full(w, num_tasks, jnp.int32),
         inconsistencies=jnp.int32(0),
         repartitions=jnp.int32(0),
         messages=jnp.int32(0),
         probes=jnp.int32(0),
+        lost=jnp.int32(0),  # in-flight tasks lost to worker crashes
     )
 
 
@@ -184,6 +189,7 @@ class MeghaState:
     task_finish: jax.Array     # float32[T] — inf until launched (= start+dur)
     head: jax.Array            # int32[G] — launched prefix of each GM's FIFO
     worker_finish: jax.Array   # float32[W] — free iff <= t
+    worker_task: jax.Array     # int32[W] — last task launched here (T = none)
     worker_gm: jax.Array       # int32[W] — GM that scheduled the last task
     worker_borrowed: jax.Array  # bool[W] — last task ran on a borrowed worker
     view: jax.Array            # bool[G, W] — per-GM stale availability view
@@ -191,6 +197,7 @@ class MeghaState:
     repartitions: jax.Array    # int32[]
     messages: jax.Array        # int32[]
     probes: jax.Array          # int32[]
+    lost: jax.Array            # int32[] — tasks lost to worker crashes
 
     def replace(self, **kw) -> "MeghaState":
         return dataclasses.replace(self, **kw)
@@ -216,11 +223,13 @@ class SparrowState:
     rnd: jax.Array
     task_finish: jax.Array
     worker_finish: jax.Array
+    worker_task: jax.Array  # int32[W] — last task launched here (T = none)
     probed: jax.Array     # bool[J] — job's batch-sampling probes placed
     inconsistencies: jax.Array
     repartitions: jax.Array
     messages: jax.Array
     probes: jax.Array
+    lost: jax.Array       # int32[] — tasks lost to worker crashes
 
     def replace(self, **kw) -> "SparrowState":
         return dataclasses.replace(self, **kw)
@@ -252,6 +261,7 @@ class EagleState:
     repartitions: jax.Array
     messages: jax.Array
     probes: jax.Array
+    lost: jax.Array          # int32[] — tasks lost to worker crashes
 
     def replace(self, **kw) -> "EagleState":
         return dataclasses.replace(self, **kw)
@@ -259,7 +269,6 @@ class EagleState:
 
 def init_eagle_state(cfg: SimxConfig, num_tasks: int, num_jobs: int) -> EagleState:
     return EagleState(
-        worker_task=jnp.full(cfg.num_workers, num_tasks, jnp.int32),
         probed=jnp.zeros(num_jobs, jnp.bool_),
         reserv=jnp.zeros((num_jobs, cfg.num_workers), jnp.bool_),
         long_head=jnp.int32(0),
@@ -276,6 +285,7 @@ class PigeonState:
     rnd: jax.Array
     task_finish: jax.Array
     worker_finish: jax.Array
+    worker_task: jax.Array   # int32[W] — last task launched here (T = none)
     high_head: jax.Array     # int32[NG] — launched prefix of each group's
     low_head: jax.Array      # int32[NG]   high/low-priority FIFO
     since_low: jax.Array     # int32[NG] — WFQ: high tasks since the last low
@@ -283,6 +293,7 @@ class PigeonState:
     repartitions: jax.Array
     messages: jax.Array
     probes: jax.Array
+    lost: jax.Array          # int32[] — tasks lost to worker crashes
 
     def replace(self, **kw) -> "PigeonState":
         return dataclasses.replace(self, **kw)

@@ -1,4 +1,4 @@
-"""Fig. 2 sweep driver: a (seed x load) grid compiled into ONE program.
+"""Fig. 2 / Fig. 4 sweep drivers: whole grids compiled into ONE program.
 
 The paper's headline comparison sweeps scheduler x load at a fixed DC size
 and reports p50/p95 job delay per point.  For the synthetic trace, load
@@ -18,12 +18,24 @@ than vmapped.  Only ``submit``/``job_submit`` and the seed are batched.
 Percentiles are reduced *inside* the compiled program — a 50k-worker grid
 never materializes per-task records on the host (compare
 ``SimxRun.to_run_metrics``'s python-loop warning).
+
+``fig4_sweep`` is the fault-tolerance counterpart (paper §3.5, Fig. 4):
+the grid axis is fault *severity* instead of load — a batched
+``FaultSchedule`` (leading axis = fraction of the DC crashed) vmaps
+through ``simulate_fixed`` exactly like the submit-time arrays do, so a
+whole availability study is again one compiled program per scheduler.
+
+Both drivers pre-flight the dense ``[J, W]`` probe/reservation memory the
+sparrow/eagle rules materialize per grid point and fail fast with an
+actionable message instead of OOMing mid-compile (``check_probe_memory``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import logging
+import math
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +46,12 @@ from repro.simx import eagle as simx_eagle
 from repro.simx import megha as simx_megha
 from repro.simx import pigeon as simx_pigeon
 from repro.simx import sparrow as simx_sparrow
+from repro.simx.faults import FaultSchedule, fault_grid_schedule
 from repro.simx.megha import MatchFn
 from repro.simx.state import SimxConfig, TaskArrays, export_workload
 from repro.workload.synth import synthetic_trace
+
+log = logging.getLogger(__name__)
 
 #: scheduler name -> round-synchronous simulate_fixed(cfg, tasks, seed, R)
 SIMULATE_FIXED: dict[str, Callable] = {
@@ -48,9 +63,9 @@ SIMULATE_FIXED: dict[str, Callable] = {
 
 
 def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
-    """Reduce one finished state to the Fig. 2 observables, inside jit:
-    p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs) + completion
-    counts."""
+    """Reduce one finished state to the Fig. 2 / Fig. 4 observables, inside
+    jit: p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs),
+    completion counts, and the crash-loss counter."""
     done = state.task_finish <= state.t
     fin = jnp.where(done, state.task_finish, jnp.inf)
     job_finish = jnp.full(tasks.num_jobs, -jnp.inf).at[tasks.job].max(fin)
@@ -62,7 +77,55 @@ def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
         "mean": jnp.nanmean(delays),
         "jobs_done": jnp.sum(jnp.isfinite(job_finish), dtype=jnp.int32),
         "tasks_done": jnp.sum(done, dtype=jnp.int32),
+        "lost": state.lost,
     }
+
+
+#: Rough resident bytes per [J, W] element per grid point for the dense
+#: probe/reservation machinery (masks + the int32 late-binding slot/serve
+#: intermediates); megha/pigeon carry no [J, W] state.
+_JW_BYTES_PER_ELEM = {"sparrow": 12, "eagle": 18}
+
+
+def probe_memory_bytes(
+    scheduler: str, num_jobs: int, num_workers: int, n_points: int
+) -> int:
+    """Estimated peak bytes of dense [J, W] probe/reservation state a
+    compiled (vmapped) grid materializes; 0 for schedulers without it."""
+    per = _JW_BYTES_PER_ELEM.get(scheduler.lower(), 0)
+    return per * num_jobs * num_workers * n_points
+
+
+def check_probe_memory(
+    scheduler: str,
+    num_jobs: int,
+    num_workers: int,
+    n_points: int,
+    limit_bytes: Optional[float],
+) -> int:
+    """Log the [J, W] memory estimate and fail fast when it exceeds
+    ``limit_bytes`` (None disables), instead of OOMing mid-compile."""
+    est = probe_memory_bytes(scheduler, num_jobs, num_workers, n_points)
+    if not est:
+        return est
+    log.info(
+        "%s grid: ~%.2f GiB dense [J=%d, W=%d] probe/reservation state "
+        "across %d vmapped points",
+        scheduler, est / 2**30, num_jobs, num_workers, n_points,
+    )
+    if limit_bytes is not None and est > limit_bytes:
+        raise RuntimeError(
+            f"{scheduler} sweep needs ~{est / 2**30:.1f} GiB of dense "
+            f"[J={num_jobs}, W={num_workers}] probe/reservation state over "
+            f"{n_points} vmapped grid points, above the "
+            f"{limit_bytes / 2**30:.1f} GiB limit. Shrink the grid "
+            "(fewer loads/fractions/seeds per call), split the job list "
+            "into batches of sweeps, or raise mem_limit_gb if the host "
+            "really has the RAM. megha/pigeon carry no [J, W] state and "
+            "sweep at any scale; the events backend handles single "
+            "fault/correctness runs of any job count."
+        )
+    return est
 
 
 def make_load_grid(
@@ -150,6 +213,7 @@ def fig2_sweep(
     trace_seed: int = 0,
     use_pallas: bool = False,
     interpret: bool = True,
+    mem_limit_gb: Optional[float] = 16.0,
     **cfg_kwargs,
 ) -> dict[str, np.ndarray]:
     """Convenience wrapper: build the load grid, size the round budget off
@@ -159,13 +223,19 @@ def fig2_sweep(
     tasks) at Fig. 2 scale; ``benchmarks/bench_simx.py --full`` drives this
     at 50k workers.  On TPU hosts pass ``use_pallas=True`` (and
     ``interpret=False``) to run the rank-and-select match as a compiled
-    Pallas kernel.
+    Pallas kernel.  ``mem_limit_gb`` bounds the dense [J, W] probe state
+    sparrow/eagle grids materialize (fail fast, not mid-compile OOM; None
+    disables).
     """
     name = scheduler.lower()
     if name == "megha":
         num_workers = grid_workers(
             num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
         )
+    check_probe_memory(
+        name, num_jobs, num_workers, len(loads) * num_seeds,
+        None if mem_limit_gb is None else mem_limit_gb * 2**30,
+    )
     cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
     tasks, submit_g, job_submit_g = make_load_grid(
         loads,
@@ -190,6 +260,120 @@ def fig2_sweep(
     )
     res = {k: np.asarray(v) for k, v in out.items()}
     res["loads"] = np.asarray(loads)
+    res["num_rounds"] = np.asarray(num_rounds)
+    res["num_tasks"] = np.asarray(tasks.num_tasks)
+    return res
+
+
+def fault_sweep_grid(
+    scheduler: str,
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    schedules: FaultSchedule,     # leaves carry a leading severity axis [F]
+    seeds: jax.Array,             # int[S]
+    num_rounds: int,
+    match_fn: MatchFn | None = None,
+) -> dict[str, jax.Array]:
+    """Run a (fault severity x seed) grid as one jitted vmap-of-vmap
+    program — the Fig. 4 counterpart of ``sweep_grid``.  Returns
+    ``point_summary`` fields stacked to ``[F, S]`` arrays (``lost`` counts
+    the in-flight tasks crashes destroyed per point)."""
+    name = scheduler.lower()
+    sim = SIMULATE_FIXED[name]
+    sim_kw = {} if name == "sparrow" else {"match_fn": match_fn}
+
+    def point(fs, seed):
+        return point_summary(
+            sim(cfg, tasks, seed, num_rounds, faults=fs, **sim_kw), tasks
+        )
+
+    grid = jax.jit(
+        jax.vmap(                     # fault severities
+            jax.vmap(point, in_axes=(None, 0)),  # seeds
+            in_axes=(0, None),
+        )
+    )
+    return grid(schedules, jnp.asarray(seeds))
+
+
+def fig4_sweep(
+    scheduler: str,
+    *,
+    fractions: Sequence[float] = (0.0, 0.02, 0.05, 0.1),
+    fail_time: Optional[float] = None,
+    outage: float = 2.0,
+    gm_outages: int = 0,
+    heartbeat_delay: float = 0.0,
+    num_seeds: int = 2,
+    load: float = 0.8,
+    num_workers: int = 1024,
+    num_jobs: int = 32,
+    tasks_per_job: int = 128,
+    dt: float = 0.05,
+    slack: float = 6.0,
+    trace_seed: int = 0,
+    fault_seed: int = 0,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    mem_limit_gb: Optional[float] = 16.0,
+    **cfg_kwargs,
+) -> dict[str, np.ndarray]:
+    """The Fig. 4 availability study: one compiled (severity x seed) grid.
+
+    Each severity point crashes ``fraction * num_workers`` random workers
+    at ``fail_time`` (default: mid-arrival-span) for ``outage`` seconds —
+    plus, for megha, ``gm_outages`` GMs over the same window and an
+    optional heartbeat-delay perturbation.  The qualitative signature to
+    expect mirrors the paper's §3.5 claim: megha's eventually-consistent
+    state absorbs the crashes (stale views are repaired by the normal
+    inconsistency/heartbeat machinery), while pigeon's static groups park
+    work behind dead workers until they return.
+    """
+    name = scheduler.lower()
+    if name == "megha":
+        num_workers = grid_workers(
+            num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
+        )
+    check_probe_memory(
+        name, num_jobs, num_workers, len(fractions) * num_seeds,
+        None if mem_limit_gb is None else mem_limit_gb * 2**30,
+    )
+    cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
+    tasks = export_workload(
+        synthetic_trace(
+            num_jobs=num_jobs,
+            tasks_per_job=tasks_per_job,
+            load=load,
+            num_workers=num_workers,
+            seed=trace_seed,
+        )
+    )
+    if fail_time is None:
+        fail_time = 0.5 * float(jnp.max(tasks.submit))
+    schedules = fault_grid_schedule(
+        num_workers,
+        cfg.num_gms,
+        fractions,
+        fail_time=fail_time,
+        outage=outage,
+        gm_outages=gm_outages if name == "megha" else 0,
+        dt=dt,
+        heartbeat_delay=heartbeat_delay,
+        seed=fault_seed,
+    )
+    from repro.simx.engine import estimate_rounds
+
+    num_rounds = estimate_rounds(cfg, tasks, slack=slack) + int(
+        math.ceil((fail_time + outage) / dt)
+    )
+    out = fault_sweep_grid(
+        name, cfg, tasks, schedules, jnp.arange(num_seeds), num_rounds,
+        match_fn=simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret),
+    )
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["fractions"] = np.asarray(fractions)
+    res["fail_time"] = np.asarray(fail_time)
+    res["outage"] = np.asarray(outage)
     res["num_rounds"] = np.asarray(num_rounds)
     res["num_tasks"] = np.asarray(tasks.num_tasks)
     return res
