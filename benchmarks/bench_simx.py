@@ -31,6 +31,16 @@ Two sections:
    (``repro.simx.sweep.fig4_sweep``; recipe in docs/fig4_faults.md).
    ``--only-faults`` (module CLI) prints just the fault rows — the CI
    smoke entrypoint.
+
+4. **J-heavy queue-encoding rows** — one sparrow + one eagle point at
+   32768 jobs x 50k workers, a (jobs, workers) product whose dense
+   [J, W] probe state (~20 / ~30 GiB) tripped the retired
+   ``check_probe_memory`` 16 GiB ceiling; the capped per-worker
+   reservation-queue encoding carries ~2 MB of scan state instead.
+   Rows record tasks/sec, measured carried-state bytes (summed scan-carry
+   leaves), the dense-era GiB figure, and the overflow counter.  Runs
+   with ``--full`` (50k-worker compiles cost minutes, like the rest of
+   that tier); ``--only-bigjob`` prints just these rows.
 """
 
 from __future__ import annotations
@@ -156,6 +166,61 @@ def _fault_rows(full: bool, schedulers=sxe.SCHEDULERS) -> list[str]:
     return rows
 
 
+#: Section 4: jobs x workers sized so the dense [J, W] encoding needed
+#: 12 * J * W ~ 20 GiB (sparrow) / 18 * J * W ~ 30 GiB (eagle) for ONE
+#: point — above the old 16 GiB fail-fast ceiling — while the task count
+#: (and hence the round budget) stays bench-sized.
+BIGJOB = dict(num_jobs=32768, tasks_per_job=2, num_workers=50_000)
+
+
+def _bigjob_rows() -> list[str]:
+    """Section 4: the J-heavy grid point the dense encoding could not run."""
+    import jax.tree_util as jtu
+
+    from repro.simx import sparrow as sxsp
+    from repro.simx import eagle as sxea
+    from repro.simx.state import init_eagle_state, init_sparrow_state
+
+    spec = BIGJOB
+    rows = []
+    for sched, sim, init in (
+        ("sparrow", sxsp.simulate_fixed, init_sparrow_state),
+        ("eagle", sxea.simulate_fixed, init_eagle_state),
+    ):
+        dense_gb = (
+            sxs.DENSE_JW_BYTES_PER_ELEM[sched]
+            * spec["num_jobs"] * spec["num_workers"] / 2**30
+        )
+        assert dense_gb > 16, "point must exceed the retired dense ceiling"
+        # the queue-model pre-flight that replaced that ceiling passes
+        sxs.check_probe_memory(
+            sched, spec["num_jobs"], spec["num_workers"], 1, 16 * 2**30,
+            tasks_per_job=spec["tasks_per_job"],
+        )
+        cfg = SimxConfig(num_workers=spec["num_workers"], dt=0.05)
+        tasks = export_workload(synthetic_trace(
+            num_jobs=spec["num_jobs"], tasks_per_job=spec["tasks_per_job"],
+            load=0.8, num_workers=spec["num_workers"], seed=13,
+        ))
+        state_bytes = sum(
+            x.nbytes for x in jtu.tree_leaves(init(cfg, tasks))
+        )
+        rounds = sxe.estimate_rounds(cfg, tasks)
+        t0 = time.time()
+        state = jax.block_until_ready(sim(cfg, tasks, 0, rounds))
+        wall = time.time() - t0
+        done = int((state.task_finish <= state.t).sum())
+        rows.append(
+            f"simx_bigjob_{sched},{wall * 1e6 / tasks.num_tasks:.2f},"
+            f"tasks_per_sec={tasks.num_tasks / wall:.0f};wall={wall:.2f}s;"
+            f"jobs={spec['num_jobs']};workers={spec['num_workers']};"
+            f"rounds={rounds};done={done}/{tasks.num_tasks};"
+            f"state_mb={state_bytes / 2**20:.1f};dense_gb={dense_gb:.1f};"
+            f"overflow={int(state.res_overflow)};lag={int(state.probe_lag)}"
+        )
+    return rows
+
+
 def _fault_smoke_row() -> list[str]:
     """The always-on smoke: a minimal megha severity grid exercising the
     fault path (crash wave + GM window + recovery) end to end."""
@@ -200,6 +265,8 @@ def run(full: bool = False, faults: bool = False) -> list[str]:
                 f"speedup={tps / ev_tps:.1f}x"
             )
     rows.extend(_sweep_rows(full))
+    if full:  # 50k-worker compiles: minutes of wall clock, like the rest of --full
+        rows.extend(_bigjob_rows())
     rows.extend(_fault_smoke_row())
     if faults:
         rows.extend(_fault_rows(full))
@@ -215,9 +282,13 @@ if __name__ == "__main__":
                     help="add the Fig. 4 fault-severity grid rows")
     ap.add_argument("--only-faults", action="store_true",
                     help="print just the fault rows (the CI smoke entrypoint)")
+    ap.add_argument("--only-bigjob", action="store_true",
+                    help="print just the J-heavy queue-encoding rows")
     args = ap.parse_args()
     if args.only_faults:
         out = _fault_smoke_row() + (_fault_rows(args.full) if args.faults else [])
+    elif args.only_bigjob:
+        out = _bigjob_rows()
     else:
         out = run(full=args.full, faults=args.faults)
     for r in out:

@@ -24,6 +24,7 @@ from repro.simx.faults import (
     empty_schedule,
     fault_grid_schedule,
     is_empty,
+    jobs_with_reservation,
 )
 from repro.simx.state import (
     EagleState,
@@ -71,6 +72,7 @@ __all__ = [
     "init_pigeon_state",
     "init_sparrow_state",
     "is_empty",
+    "jobs_with_reservation",
     "point_summary",
     "run_to_completion",
     "scan_rounds",

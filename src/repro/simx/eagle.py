@@ -20,20 +20,25 @@ probing (paper §2.2.3), reformulated over dense arrays:
     covering both the short sticky-probing rule and the central
     scheduler's same-job preference for long jobs.
 
-Approximations vs. the event backend (beyond round quantization, see
-``engine``): probe rejection is evaluated once, at the arrival round,
-against the ground-truth set of long-running workers (the event backend
-re-sends against a possibly stale SS adopted from the last rejection);
-re-routed probes pick targets by a per-job random rotation rather than a
-fresh uniform draw; and the central scheduler launches only onto workers
-that are *actually* free, so a long task waits in the central queue
-instead of head-of-line blocking behind a short task already running on
-its assigned worker.
+**Reservation encoding** — like sparrow, short-job reservations live in
+capped per-worker queues ``resq int32[W, R_q]`` fed by a windowed probe
+edge list; SSS rejection/re-routing is evaluated *per edge* at insertion
+time (one gather + two modular re-targets per probe) instead of over the
+dense ``[J, W]`` masks of the retired encoding.  Carried probe state is
+O(W * R_q) — independent of the trace length.
 
-Memory note: like sparrow, the reservation mask and the per-round late
-binding are dense ``[J, W]`` — fine for sweep-sized traces, but many
-thousands of jobs on huge DCs should batch jobs or stay on the event
-backend.
+Approximations vs. the event backend (beyond round quantization, see
+``engine``): probe rejection is evaluated once, at the insertion round
+(normally the arrival round; an arrival burst wider than the insertion
+window pushes the tail probes — and their SSS test — a few rounds later),
+against the ground-truth set of long-running workers at that instant (the
+event backend re-sends against a possibly stale SS adopted from the last
+rejection); re-routed probes pick targets by a per-job random rotation
+rather than a fresh uniform draw; probes aimed at a full queue are
+dropped (``res_overflow``; orphan rescue keeps the job schedulable); and
+the central scheduler launches only onto workers that are *actually*
+free, so a long task waits in the central queue instead of head-of-line
+blocking behind a short task already running on its assigned worker.
 """
 
 from __future__ import annotations
@@ -44,16 +49,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.simx.faults import FaultSchedule, apply_worker_faults, worker_dead
+from repro.simx.faults import (
+    FaultSchedule,
+    apply_worker_faults,
+    jobs_with_reservation,
+    worker_dead,
+)
 from repro.simx.megha import MatchFn, default_match_fn
-from repro.simx.sparrow import late_bind, probe_mask
-from repro.simx.state import EagleState, SimxConfig, TaskArrays, init_eagle_state
+from repro.simx.sparrow import (
+    build_probe_edges,
+    compact_queues,
+    insert_probes,
+    late_bind,
+    probe_mask,
+    probe_window_slice,
+    queue_head_pick,
+)
+from repro.simx.state import (
+    EagleState,
+    SimxConfig,
+    TaskArrays,
+    init_eagle_state,
+)
 
 
 def eagle_probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.Array:
     """bool[J, W] — each *short* job's min(d * n_tasks, W) distinct initial
     probe targets (uniform over the whole DC, ``sparrow.probe_mask``);
-    long-job rows are empty (long jobs go to the central scheduler)."""
+    long-job rows are empty (long jobs go to the central scheduler).
+    Dense reference view for tests — the transition rule works per edge."""
     short = tasks.job_est < cfg.long_threshold
     return probe_mask(key, cfg, tasks) & short[:, None]
 
@@ -63,47 +87,57 @@ def make_eagle_step(
     tasks: TaskArrays,
     key: jax.Array,
     match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
 ) -> Callable[[EagleState], EagleState]:
     """Build the jittable one-round transition function.
 
-    Round order: completions (implicit) -> probe placement with SSS
-    re-routing for newly arrived short jobs -> sticky serve (completed
-    workers continue their previous job) -> late binding (idle workers
-    serve the earliest live reservation) -> central long match -> advance
-    the central FIFO head.
+    Round order: fault transitions -> completions (implicit) -> queue
+    recycling/compaction -> windowed probe insertion with per-edge SSS
+    re-routing -> sticky serve (completed workers continue their previous
+    job) -> late binding (idle workers serve their queue heads, orphans
+    rescued) -> central long match -> advance the central FIFO head.
 
     With ``faults``, crashed workers lose their in-flight task (lost long
     tasks roll the central FIFO head back; lost shorts simply re-pend) and
     read busy until recovery — the central scheduler's ground-truth match
-    excludes them for free.  SSS additionally rejects probes aimed at dead
+    excludes them for free.  SSS additionally bounces probe edges off dead
     workers (the RPC would time out), and a short job whose every live
     reservation died is rescued by any idle worker (see the sparrow rule).
     ``faults=None`` builds the fault-free program; an empty schedule is
     bit-identical to it.
+
+    ``match_fn`` drives the wide central long match ([1, W] rows);
+    ``pick_fn`` drives the narrow [W, R] head-of-queue pick — on TPU
+    build it with ``default_match_fn(..., block_rows=1)`` (the kernel
+    pads each row to ``block_rows * 128`` lanes, so reusing the wide
+    match's default tile would inflate the queue rows ~64x).  Both
+    default to the jnp reference.
     """
     if match_fn is None:
         match_fn = default_match_fn()
+    if pick_fn is None:
+        pick_fn = default_match_fn()
     W = cfg.num_workers
     T = tasks.num_tasks
     J = tasks.num_jobs
     R = cfg.short_reserved
     k1, k2, k3 = jax.random.split(key, 3)
-    base_mask = eagle_probe_mask(k1, cfg, tasks)                # bool[J,W]
+    edge_job, edge_worker, edge_end, P, C = build_probe_edges(
+        k1, cfg, tasks, short_only=True
+    )
     # per-job re-route rotations: stage 1 anywhere, stage 2 short partition
     off1 = jax.random.randint(k2, (J,), 0, W, jnp.int32)
     off2 = jax.random.randint(k3, (J,), 0, R, jnp.int32)
     short_job = tasks.job_est < cfg.long_threshold              # bool[J]
-    kvec = jnp.where(
-        short_job, jnp.minimum(cfg.probe_ratio * tasks.job_ntasks, W), 0
-    )                                                           # int32[J]
     long_task = jnp.concatenate(
         [~short_job[tasks.job], jnp.zeros(1, jnp.bool_)]
     )                                                           # bool[T+1]
     job_pad = jnp.concatenate([tasks.job, jnp.int32([J])])      # int32[T+1]
     dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
+    job_submit_pad = jnp.concatenate([tasks.job_submit, jnp.float32([jnp.inf])])
     w_row = jnp.arange(W, dtype=jnp.int32)
-    j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
+    j_idx = jnp.arange(J, dtype=jnp.int32)
     job_start = jnp.concatenate(
         [jnp.zeros(1, jnp.int32), jnp.cumsum(tasks.job_ntasks, dtype=jnp.int32)[:-1]]
     )
@@ -149,36 +183,35 @@ def make_eagle_step(
         long_here = (worker_finish0 > t) & long_task[s.worker_task]  # bool[W]
         comp = (worker_finish0 <= t) & (worker_finish0 > t - cfg.dt)
 
-        # -- 1. newly arrived short jobs place probes, SSS re-routing -------
-        newly = (tasks.job_submit <= t) & ~s.probed & short_job
-        bm = base_mask & newly[:, None]
-        if faults is not None:
-            # SSS also bounces probes off dead workers (the RPC times out)
-            sss_reject = long_here | worker_dead(faults, t)
-        else:
-            sss_reject = long_here
+        # -- 0b. recycle completed jobs' slots, compact the queues ----------
+        resq, fill = compact_queues(s.resq, task_finish0, tasks.job, t, J)
+
+        # -- 1. windowed probe insertion with per-edge SSS re-routing -------
+        win_j, win_w, lead, ins, lagged = probe_window_slice(
+            edge_job, edge_worker, s.probe_head, C, job_submit_pad, t
+        )
         if NL or faults is not None:
-            rej0 = bm & sss_reject[None, :]
-            moved1 = jnp.take_along_axis(
-                rej0, (w_row[None, :] - off1[:, None]) % W, axis=1
-            )
-            rej1 = moved1 & sss_reject[None, :]
-            tgt2 = (w_row[None, :] + off2[:, None]) % R         # int32[J,W]
-            land2 = (
-                jnp.zeros((J, W), jnp.bool_)
-                .at[jnp.broadcast_to(j_col, (J, W)), tgt2]
-                .max(rej1)
-            )
-            newrow = (bm & ~sss_reject[None, :]) | (moved1 & ~sss_reject[None, :]) | land2
+            if faults is not None:
+                # SSS also bounces probes off dead workers (the RPC times out)
+                sss_reject = long_here | worker_dead(faults, t)
+            else:
+                sss_reject = long_here
+            wj = jnp.clip(win_j, 0, max(J - 1, 0))
+            rej0 = ins & sss_reject[jnp.clip(win_w, 0, W - 1)]
+            w1 = jnp.where(rej0, (win_w + off1[wj]) % W, win_w)
+            rej1 = rej0 & sss_reject[w1]
+            wfin = jnp.where(rej1, (w1 + off2[wj]) % R, w1)
             n_rej0 = jnp.sum(rej0, dtype=jnp.int32)
             n_rej1 = jnp.sum(rej1, dtype=jnp.int32)
         else:  # no long jobs in the trace: SSS machinery compiles out
-            newrow = bm
+            wfin = win_w
             n_rej0 = n_rej1 = jnp.int32(0)
-        reserv = s.reserv | newrow
-        n_init = jnp.sum(jnp.where(newly, kvec, 0), dtype=jnp.int32)
-        probes = s.probes + n_init + n_rej0 + n_rej1
-        messages = s.messages + n_init + 2 * (n_rej0 + n_rej1)  # reject + resend
+        resq, n_over = insert_probes(resq, fill, wfin, win_j, ins)
+        head = s.probe_head + lead
+        # see the sparrow rule: saturated windows make probe lag observable
+        lag = s.probe_lag + lagged.astype(jnp.int32)
+        probes = s.probes + lead + n_rej0 + n_rej1
+        messages = s.messages + lead + 2 * (n_rej0 + n_rej1)    # reject + resend
 
         # -- 2. sticky batch draining: completed workers keep their job -----
         pend_task = jnp.isinf(task_finish0) & (tasks.submit <= t)
@@ -194,24 +227,29 @@ def make_eagle_step(
             launch1, task1, t, task_finish0, worker_finish0, s.worker_task
         )
 
-        # -- 3. late binding: idle workers serve live reservations ----------
+        # -- 3. late binding: idle workers serve their queue heads ----------
         pend_task = jnp.isinf(task_finish) & (tasks.submit <= t)
         pending = (
-            jnp.zeros(J, jnp.int32).at[tasks.job].add(pend_task.astype(jnp.int32))
+            jnp.zeros(J + 1, jnp.int32)
+            .at[tasks.job]
+            .add(pend_task.astype(jnp.int32))
         )
         idle = worker_finish <= t
-        if faults is None:
-            active = reserv & (pending > 0)[:, None]            # bool[J,W]
-        else:
-            # orphan rescue (see the sparrow rule): every reservation dead
-            # -> the short job may be served by any idle worker
-            dead = worker_dead(faults, t)
-            has_live = jnp.any(reserv & ~dead[None, :], axis=1)
-            orphan = (pending > 0) & (s.probed | newly) & ~has_live
-            active = (reserv | orphan[:, None]) & (pending > 0)[:, None]
-        job_pick = jnp.min(
-            jnp.where(active & idle[None, :], j_col, J), axis=0
-        )                                                       # int32[W]
+        active = (
+            (resq < J) & (pending[jnp.minimum(resq, J)] > 0) & idle[:, None]
+        )
+        job_pick = queue_head_pick(resq, active, pick_fn, J)    # int32[W]
+        # orphan rescue (see the sparrow rule): a pending short job with no
+        # live reservation anywhere may be served by any idle worker
+        dead = worker_dead(faults, t) if faults is not None else None
+        orphan = (
+            short_job
+            & (edge_end <= head)
+            & (pending[:-1] > 0)
+            & ~jobs_with_reservation(resq, J, dead=dead)
+        )
+        rescue = jnp.min(jnp.where(orphan, j_idx, J))
+        job_pick = jnp.where(idle, jnp.minimum(job_pick, rescue), J)
         launch2, task2 = late_bind(job_pick, pend_task, tasks.job, job_start)
         start = t + 3 * cfg.hop  # get-task RPC round trip + launch
         task_finish, worker_finish, worker_task = apply_launch(
@@ -245,10 +283,10 @@ def make_eagle_step(
             # advance the head past the launched prefix
             fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
             launched2 = ~jnp.isinf(fpad2[wtask]) | (wtask >= T)
-            lead = jnp.sum(
+            lead2 = jnp.sum(
                 jnp.cumprod(launched2.astype(jnp.int32)), dtype=jnp.int32
             )
-            long_head = jnp.minimum(long_head + lead, NL)
+            long_head = jnp.minimum(long_head + lead2, NL)
 
         return s.replace(
             t=t + cfg.dt,
@@ -256,8 +294,10 @@ def make_eagle_step(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
-            probed=s.probed | newly,
-            reserv=reserv,
+            resq=resq,
+            probe_head=head,
+            res_overflow=s.res_overflow + n_over,
+            probe_lag=lag,
             long_head=long_head,
             messages=messages,
             probes=probes,
@@ -273,12 +313,13 @@ def simulate_fixed(
     seed: jax.Array | int,
     num_rounds: int,
     match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
 ) -> EagleState:
     """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed
     and in the submit-time arrays)."""
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    step = make_eagle_step(cfg, tasks, key, match_fn, faults=faults)
-    state = init_eagle_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    step = make_eagle_step(cfg, tasks, key, match_fn, pick_fn, faults=faults)
+    state = init_eagle_state(cfg, tasks)
     state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
     return state

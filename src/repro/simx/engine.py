@@ -40,6 +40,28 @@ module docstrings; these are the eagle/pigeon counterparts):
     actually-free long-partition workers: a long task whose event-backend
     counterpart would head-of-line block behind a running short task
     instead stays queued centrally, which shifts (not drops) its wait.
+  * **Sparrow/eagle reservation queues** — probe/reservation state is a
+    capped per-worker queue ``int32[W, R]`` (R = ``SimxConfig.queue_cap``),
+    not a dense [J, W] mask, so carried state is independent of the trace
+    length.  Three sub-approximations follow: (1) probes are inserted
+    through a bounded per-round window over the arrival-ordered edge list
+    (``SimxConfig.insert_window``) — an arrival burst wider than the
+    window lands over the following rounds (the auto window drains a
+    whole-trace burst in ~32 rounds; totals, and hence probe/message
+    counters, are unchanged), and every saturated round increments the
+    ``probe_lag`` counter so the added latency is observable — a nonzero
+    value on a latency-sensitive study means raise ``probe_window``; (2)
+    a probe aimed at a worker whose queue is
+    already full is dropped and counted in ``res_overflow`` — the event
+    backend's unbounded per-worker queues never drop, so a deliberately
+    undersized R trades placement quality for memory while the *orphan
+    rescue* below preserves liveness; (3) a job with pending work, all of
+    whose probes were dropped (or — under faults — whose every reservation
+    sits on a dead worker), is servable by any idle worker until a
+    reservation becomes live again.  With the auto cap, overflow is zero
+    on load-feasible traces and the encoding is behavior-equivalent to the
+    retired dense mask (pinned bitwise against an in-test dense reference
+    by ``tests/test_simx_queues.py``).
   * **Pigeon group-master quantization** — each group coordinator serves
     its high/low FIFOs once per round: a task arriving to a group with a
     free worker launches at the round boundary instead of on arrival
@@ -314,6 +336,8 @@ def simulate_workload(
     group_size: int = 40,
     reserved_per_group: int = 2,
     weight: int = 4,
+    reserve_cap: int = 0,
+    probe_window: int = 0,
     dt: float = 0.05,
     seed: int = 0,
     chunk: int = 256,
@@ -328,7 +352,9 @@ def simulate_workload(
     Mirrors ``sim.simulator.run_simulation`` semantics; ``until`` caps the
     simulated time span instead of running until all tasks finish.
     Scheduler-specific knobs carry the event backend's names and defaults
-    (``weight`` maps to ``SimxConfig.wfq_weight``).  ``faults`` injects a
+    (``weight`` maps to ``SimxConfig.wfq_weight``; ``reserve_cap`` /
+    ``probe_window`` size the sparrow/eagle reservation queues, 0 = auto).
+    ``faults`` injects a
     fault schedule (a dense ``FaultSchedule`` or a backend-neutral
     ``FaultPlan``) into the compiled round step — see the module docstring
     for the fault-timing contract.
@@ -353,6 +379,8 @@ def simulate_workload(
         group_size=group_size,
         reserved_per_group=reserved_per_group,
         wfq_weight=weight,
+        reserve_cap=reserve_cap,
+        probe_window=probe_window,
         dt=dt,
         seed=seed,
     )
@@ -374,17 +402,23 @@ def simulate_workload(
             faults = None  # the no-op schedule: build the plain program
     key = jax.random.PRNGKey(seed)
     match_fn = simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret)
+    # the [W, R] head-of-queue pick wants a 1-row-block kernel tile (queue
+    # rows are R <= 64 wide; the wide match's default would pad them 64x)
+    pick_fn = simx_megha.default_match_fn(
+        use_pallas=use_pallas, interpret=interpret, block_rows=1
+    )
     if name == "megha":
         orders = simx_megha.gm_orders(key, cfg)
         step = simx_megha.make_megha_step(cfg, tasks, orders, match_fn, faults=faults)
         state = init_megha_state(cfg, tasks.num_tasks)
     elif name == "sparrow":
-        probes = simx_sparrow.probe_mask(key, cfg, tasks)
-        step = simx_sparrow.make_sparrow_step(cfg, tasks, probes, faults=faults)
-        state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
+        step = simx_sparrow.make_sparrow_step(cfg, tasks, key, pick_fn, faults=faults)
+        state = init_sparrow_state(cfg, tasks)
     elif name == "eagle":
-        step = simx_eagle.make_eagle_step(cfg, tasks, key, match_fn, faults=faults)
-        state = init_eagle_state(cfg, tasks.num_tasks, tasks.num_jobs)
+        step = simx_eagle.make_eagle_step(
+            cfg, tasks, key, match_fn, pick_fn, faults=faults
+        )
+        state = init_eagle_state(cfg, tasks)
     else:
         step = simx_pigeon.make_pigeon_step(cfg, tasks, match_fn, faults=faults)
         state = init_pigeon_state(cfg, tasks.num_tasks)

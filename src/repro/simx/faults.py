@@ -130,6 +130,30 @@ def apply_worker_faults(
     return task_finish, worker_finish, lost_w, jnp.sum(lost_w, dtype=jnp.int32)
 
 
+def jobs_with_reservation(
+    resq: jax.Array, num_jobs: int, dead: jax.Array | None = None
+) -> jax.Array:
+    """bool[J] — jobs holding at least one reservation-queue entry (on a
+    currently-live worker when ``dead`` is given).
+
+    The queue-walking replacement for the dense-mask orphan test
+    ``any(probes & ~dead[None, :], axis=1)``: one scatter-max over the
+    ``int32[W, R]`` per-worker queues (J = empty sentinel, dropped as
+    out-of-bounds) instead of a [J, W] reduction.  Sparrow and eagle use
+    it for orphan rescue — a pending job with no live entry anywhere
+    (every probed worker down, or every probe dropped on a full queue) is
+    temporarily servable by any idle worker.
+    """
+    exists = resq < num_jobs
+    if dead is not None:
+        exists = exists & ~dead[:, None]
+    return (
+        jnp.zeros(num_jobs, jnp.bool_)
+        .at[resq.ravel()]
+        .max(exists.ravel(), mode="drop")
+    )
+
+
 def gm_down_mask(fs: FaultSchedule, t: jax.Array) -> jax.Array:
     """bool[G] — GMs inside their down window at time ``t``."""
     return (fs.gm_down <= t) & (t < fs.gm_up)

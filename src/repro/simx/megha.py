@@ -70,12 +70,20 @@ def gm_orders(key: jax.Array, cfg: SimxConfig) -> jax.Array:
     return jnp.stack(rows)
 
 
-def default_match_fn(use_pallas: bool = False, interpret: bool = True) -> MatchFn:
+def default_match_fn(
+    use_pallas: bool = False, interpret: bool = True, block_rows: int = 64
+) -> MatchFn:
     """The GM match primitive: the batched Pallas kernel on TPU, the jnp
     reference on CPU (Pallas interpret mode is orders of magnitude slower
-    than XLA inside a scanned hot loop)."""
+    than XLA inside a scanned hot loop).
+
+    ``block_rows`` sizes the kernel's VMEM tile; the kernel pads each row
+    to ``block_rows * 128`` lanes, so wide-and-few matches (megha's
+    [G, W] GM rows) want the default while narrow-and-many ones (the
+    sparrow/eagle [W, R] head-of-queue pick, R ≲ 64) should pass
+    ``block_rows=1``."""
     if use_pallas:
-        return partial(match_ranks_batched, interpret=interpret)
+        return partial(match_ranks_batched, interpret=interpret, block_rows=block_rows)
     return ref.match_ranks_batched_ref
 
 

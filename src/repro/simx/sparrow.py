@@ -1,25 +1,40 @@
 """Sparrow transition rule for the simx round-stepped backend.
 
 Vectorized batch sampling + late binding (§2.2.2).  When a job of n tasks
-arrives it probes ``d * n`` random workers, leaving a *reservation* at each
-(the probe set is materialized once as a ``bool[J, W]`` mask).  Tasks are
-NOT bound to workers: each round, every idle worker serves the
+arrives it probes ``min(d * n, W)`` DISTINCT random workers (the event
+backend's ``rng.sample`` semantics), leaving a *reservation* at each.
+Tasks are NOT bound to workers: each round, every idle worker serves the
 earliest-submitted job holding a reservation on it that still has pending
-tasks (worker reservation queues are FIFO in probe arrival order == job
-submit order), and late binding hands it that job's next pending task.
+tasks, and late binding hands it that job's next pending task.
 Reservations of fully launched jobs act cancelled — the ``pending > 0``
-mask skips them, like the event backend's cancel RPC.
+test skips them, like the event backend's cancel RPC.
+
+**Reservation encoding** — capped per-worker queues, not a dense mask:
+``resq int32[W, R]`` holds each worker's reservations as job ids (J =
+empty), with ``R = cfg.queue_cap(...)`` a small static cap.  Probes live
+in a static *edge list* sorted by job id (== submit order) and are
+inserted through a ``cfg.insert_window(...)``-wide head window each round
+(the megha FIFO-window trick), entries are recycled when their job
+completes, and the queues are re-compacted every round so they stay
+ascending in job id — which makes the head-of-queue pick (earliest live
+reservation) exactly a rank-and-select with ``n = 1`` per worker row,
+routed through the same (Pallas-capable) ``match_fn`` primitive as
+megha's GM match.  Carried probe state is O(W * R) — independent of the
+trace length — plus O(d * T) static edge constants (the same order as the
+task arrays themselves); nothing is ever materialized at [J, W].
 
 Approximations vs. the event backend (beyond round quantization, see
-``engine``): probes are sampled with replacement rather than distinct, and
-a worker whose chosen job runs out of pending tasks this round (more
-claimants than tasks) retries next round instead of popping the next
-reservation within the same 0.5 ms RPC.
-
-Memory note: the probe mask and the per-round serve ranking are dense
-``[J, W]`` — fine for sweep-sized traces (200 jobs x 50k workers = 10 MB),
-but quadratic-ish workloads (many thousands of jobs on huge DCs) should
-batch jobs or stay on the event backend.
+``engine``): a worker whose chosen job runs out of pending tasks this
+round (more claimants than tasks) retries next round instead of popping
+the next reservation within the same 0.5 ms RPC; probe insertion is
+windowed, so an arrival burst wider than the window lands over the
+following rounds (the auto window drains a whole-trace burst in ~32
+rounds; saturated rounds are counted in ``probe_lag``); and a probe
+aimed at a worker whose queue is full is dropped (counted in
+``res_overflow``) — the
+orphan-rescue path keeps a job schedulable even if every one of its
+probes was dropped, so an undersized R degrades placement quality, never
+liveness.
 """
 
 from __future__ import annotations
@@ -28,9 +43,22 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.simx.faults import FaultSchedule, apply_worker_faults, worker_dead
-from repro.simx.state import SimxConfig, SparrowState, TaskArrays, init_sparrow_state
+from repro.simx.faults import (
+    FaultSchedule,
+    apply_worker_faults,
+    jobs_with_reservation,
+    worker_dead,
+)
+from repro.simx.megha import MatchFn, default_match_fn
+from repro.simx.state import (
+    SimxConfig,
+    SparrowState,
+    TaskArrays,
+    init_sparrow_state,
+    probe_edge_layout,
+)
 
 
 def late_bind(
@@ -44,73 +72,273 @@ def late_bind(
     (``job_start``) turns one global cumsum over ``pend_task`` into
     within-job pending ranks.  Returns ``(launch bool[W], task int32[W])``
     with ``T`` meaning none.
+
+    O(T + W log W): serve ranks come from one stable sort of ``job_pick``
+    plus a first-occurrence ``searchsorted``, and the (job, rank) -> task
+    lookup is a single [T] scatter into the contiguous task layout (job
+    j's r-th pending task is written at ``job_start[j] + r``, which stays
+    inside j's slice).  Bitwise-equal to the retired dense [J, W]
+    formulation — ``tests/test_simx_queues.py`` pins this against an
+    in-test dense reference.
     """
     T = job.shape[0]
     W = job_pick.shape[0]
     J = job_start.shape[0]
     t_row = jnp.arange(T, dtype=jnp.int32)
-    j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
-    pending = jnp.zeros(J, jnp.int32).at[job].add(pend_task.astype(jnp.int32))
-    claim_j = job_pick[None, :] == j_col                        # bool[J,W]
-    serve_rank = jnp.cumsum(claim_j, axis=1, dtype=jnp.int32) - 1
-    serve = claim_j & (serve_rank < pending[:, None])
-    c = jnp.cumsum(pend_task, dtype=jnp.int32)
+    w_row = jnp.arange(W, dtype=jnp.int32)
+    pend_i = pend_task.astype(jnp.int32)
+    pending = jnp.zeros(J, jnp.int32).at[job].add(pend_i)
+    c = jnp.cumsum(pend_i, dtype=jnp.int32)
     base = jnp.where(job_start > 0, c[jnp.maximum(job_start - 1, 0)], 0)
     prank = c - 1 - base[job]                                   # int32[T]
-    slot = jnp.full((J, W), T, jnp.int32).at[
-        job, jnp.where(pend_task & (prank < W), prank, W)
-    ].set(t_row, mode="drop")                                   # int32[J,W]
-    srank = jnp.where(serve, serve_rank, W)
-    task_pick = jnp.min(
-        jnp.where(
-            serve,
-            jnp.take_along_axis(slot, jnp.clip(srank, 0, W - 1), axis=1),
-            T,
-        ),
-        axis=0,
-    )                                                           # int32[W]
-    return jnp.any(serve, axis=0), task_pick
+    slot = jnp.full(T, T, jnp.int32).at[
+        jnp.where(pend_task, job_start[job] + prank, T)
+    ].set(t_row, mode="drop")                                   # int32[T]
+    order = jnp.argsort(job_pick, stable=True)
+    sj = job_pick[order]
+    first = jnp.searchsorted(sj, sj, side="left").astype(jnp.int32)
+    rank = jnp.zeros(W, jnp.int32).at[order].set(w_row - first)
+    jp = jnp.clip(job_pick, 0, J - 1)
+    serve = (job_pick < J) & (rank < pending[jp])
+    pos = job_start[jp] + rank
+    task_pick = jnp.where(serve, slot[jnp.clip(pos, 0, T - 1)], T)
+    return serve, task_pick
+
+
+def probe_targets(
+    key: jax.Array, cfg: SimxConfig, tasks: TaskArrays, kmax: int
+) -> jax.Array:
+    """int32[J, kmax] — per-job probe targets; row j's first k_j entries are
+    a uniform ordered sample of k_j DISTINCT workers (``rng.sample``
+    semantics: the kmax largest of W iid uniform scores, whose descending
+    order is a uniform k-permutation).  Exactly kmax indices per row by
+    construction — duplicate scores cannot widen the selection the way the
+    old ``scores <= kth`` threshold mask could.
+
+    Rows are generated in chunks through ``lax.map`` so the transient
+    [chunk, W] score buffer stays a few MB no matter how long the trace is
+    (the retired dense path materialized [J, W] here).
+    """
+    J, W = tasks.num_jobs, cfg.num_workers
+    if kmax <= 0 or J == 0:
+        return jnp.zeros((J, max(kmax, 0)), jnp.int32)
+    chunk = int(max(1, min(J, (1 << 21) // max(W, 1))))
+    n_chunks = -(-J // chunk)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_chunks))
+
+    def sample(k):
+        scores = jax.random.uniform(k, (chunk, W))
+        return jax.lax.top_k(scores, kmax)[1].astype(jnp.int32)
+
+    rows = jax.lax.map(sample, keys)                    # [n_chunks, chunk, kmax]
+    return rows.reshape(n_chunks * chunk, kmax)[:J]
 
 
 def probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.Array:
     """bool[J, W] — the min(d * n_tasks, W) DISTINCT workers each job probes.
 
-    Distinct sampling (the event backend uses ``rng.sample``) matters: with
-    replacement, d*n draws collide and shrink the effective reservation set.
-    Each row draws uniform scores and keeps the k_j smallest — an implicit
-    uniform k_j-subset."""
-    J = tasks.num_jobs
-    W = cfg.num_workers
-    k = jnp.minimum(cfg.probe_ratio * tasks.job_ntasks, W)          # int32[J]
-    scores = jax.random.uniform(key, (J, W))
-    kth = jnp.take_along_axis(
-        jnp.sort(scores, axis=1), jnp.maximum(k - 1, 0)[:, None], axis=1
+    Dense *reference* view of ``probe_targets`` (one scatter of the target
+    table), kept for tests and offline analysis — the transition rules
+    never materialize it.  Rank-based by construction: each row holds
+    exactly min(d * n_tasks, W) probes even on duplicate uniform scores,
+    where the old ``scores <= kth`` threshold could select more on ties.
+    """
+    J, W = tasks.num_jobs, cfg.num_workers
+    kvec = jnp.minimum(cfg.probe_ratio * tasks.job_ntasks, W)       # int32[J]
+    kmax = int(min(cfg.probe_ratio * int(np.max(np.asarray(tasks.job_ntasks), initial=0)), W))
+    targets = probe_targets(key, cfg, tasks, kmax)
+    take = jnp.arange(kmax, dtype=jnp.int32)[None, :] < kvec[:, None]
+    return (
+        jnp.zeros((J, W), jnp.bool_)
+        .at[jnp.arange(J, dtype=jnp.int32)[:, None], jnp.where(take, targets, W)]
+        .set(True, mode="drop")
     )
-    return (scores <= kth) & (k > 0)[:, None]
+
+
+def build_probe_edges(
+    key: jax.Array, cfg: SimxConfig, tasks: TaskArrays, short_only: bool = False
+) -> tuple[jax.Array, jax.Array, jax.Array, int, int]:
+    """Materialize the flat probe edge list the windowed insertion walks.
+
+    Samples the per-job target table (``probe_targets``) and gathers it
+    through the concrete ``probe_edge_layout``; both the job and worker
+    arrays are padded by the window width C so the head window's
+    ``dynamic_slice`` stays in bounds at head == P (pad jobs never
+    "arrive").  Returns ``(edge_job[P+C], edge_worker[P+C],
+    edge_end[J], P, C)``.
+    """
+    J = tasks.num_jobs
+    edge_job_np, edge_rank_np, edge_end_np, kmax = probe_edge_layout(
+        cfg, tasks, short_only=short_only
+    )
+    P = int(edge_job_np.size)
+    C = cfg.insert_window(P, kmax)
+    if P:
+        targets = probe_targets(key, cfg, tasks, kmax)
+        workers = targets[jnp.asarray(edge_job_np), jnp.asarray(edge_rank_np)]
+    else:
+        workers = jnp.zeros(0, jnp.int32)
+    edge_worker = jnp.concatenate([workers, jnp.zeros(C, jnp.int32)])
+    edge_job = jnp.concatenate(
+        [jnp.asarray(edge_job_np), jnp.full(C, J, jnp.int32)]
+    )
+    return edge_job, edge_worker, jnp.asarray(edge_end_np), P, C
+
+
+def probe_window_slice(
+    edge_job: jax.Array,
+    edge_worker: jax.Array,
+    head: jax.Array,
+    window: int,
+    job_submit_pad: jax.Array,
+    t: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One round's view of the edge list: the ``window`` edges at ``head``
+    and their ready prefix.  Submit times are sorted by job id, so
+    readiness is a prefix — ``lead`` edges insert this round and the head
+    advances by it.  Returns ``(win_job, win_worker, lead, ins mask,
+    lagged bool[])`` where ``lagged`` means a ready edge was left beyond
+    the full window, i.e. this round's insertion actually delayed a probe
+    (an exact-fit window is not lag)."""
+    J = job_submit_pad.shape[0] - 1
+    win_j = jax.lax.dynamic_slice(edge_job, (head,), (window,))
+    win_w = jax.lax.dynamic_slice(edge_worker, (head,), (window,))
+    ready = job_submit_pad[jnp.minimum(win_j, J)] <= t
+    lead = jnp.sum(jnp.cumprod(ready.astype(jnp.int32)), dtype=jnp.int32)
+    ins = jnp.arange(window, dtype=jnp.int32) < lead
+    # the first edge past the window: pad edges read as never-ready, so a
+    # clipped gather is safe at the tail of the list
+    nxt = edge_job[jnp.minimum(head + window, edge_job.shape[0] - 1)]
+    lagged = (lead == window) & (job_submit_pad[jnp.minimum(nxt, J)] <= t)
+    return win_j, win_w, lead, ins, lagged
+
+
+def insert_probes(
+    resq: jax.Array,
+    fill: jax.Array,
+    targets: jax.Array,
+    jobs: jax.Array,
+    ins: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter this round's probe edges into the per-worker queues.
+
+    ``targets``/``jobs`` are the window's edge targets and job ids,
+    ``ins`` masks the ready prefix.  A probe landing where the same job
+    already holds (or this round gains) a reservation *merges* — one
+    queue entry, like the dense bool-mask encoding it replaced; eagle's
+    SSS re-routes are the only producer of such collisions (sparrow
+    targets are distinct per job).  Kept edges are appended after the
+    ``fill`` existing entries of each queue; same-round edges aimed at
+    one worker get consecutive slots via a stable sort by target (which
+    also preserves the window's ascending-job order, keeping every queue
+    sorted by job id).  Edges whose slot lands past R are dropped —
+    returns ``(resq, n_overflow)``; merged duplicates are neither
+    inserted nor counted as overflow.
+    """
+    W, R = resq.shape
+    C = targets.shape[0]
+    c_row = jnp.arange(C, dtype=jnp.int32)
+    tw0 = jnp.where(ins, targets, W)
+    # same-round duplicates: the stable target sort keeps ascending job
+    # order within each target group, so (job, target) repeats are adjacent
+    o0 = jnp.argsort(tw0, stable=True)
+    st0, sj0 = tw0[o0], jobs[o0]
+    dup_s = (st0 == jnp.roll(st0, 1)) & (sj0 == jnp.roll(sj0, 1))
+    dup_s = dup_s.at[0].set(False)
+    dup = jnp.zeros(C, jnp.bool_).at[o0].set(dup_s)
+    # earlier-round duplicates: the job already queued on this worker
+    held = jnp.any(
+        resq[jnp.clip(tw0, 0, W - 1)] == jobs[:, None], axis=1
+    )
+    keep = ins & ~dup & ~held
+    tw = jnp.where(keep, targets, W)
+    order = jnp.argsort(tw, stable=True)
+    stw = tw[order]
+    first = jnp.searchsorted(stw, stw, side="left").astype(jnp.int32)
+    rank = jnp.zeros(C, jnp.int32).at[order].set(c_row - first)
+    slot = fill[jnp.clip(tw, 0, W - 1)] + rank
+    resq = resq.at[tw, slot].set(jobs, mode="drop")     # tw==W / slot>=R drop
+    return resq, jnp.sum(keep & (slot >= R), dtype=jnp.int32)
+
+
+def compact_queues(
+    resq: jax.Array, task_finish: jax.Array, job: jax.Array, t: jax.Array, num_jobs: int
+) -> tuple[jax.Array, jax.Array]:
+    """Recycle queue slots of completed jobs and re-compact each queue.
+
+    An entry lives while its job still has an unfinished task (launched-
+    but-running included, so a crash re-pending a task finds the job's
+    reservations intact); live entries slide to the front preserving
+    order.  Returns ``(resq, fill int32[W])``.
+    """
+    W, R = resq.shape
+    unfinished = (
+        jnp.zeros(num_jobs + 1, jnp.int32)
+        .at[job]
+        .add((task_finish > t).astype(jnp.int32))
+    )
+    live = (resq < num_jobs) & (unfinished[jnp.minimum(resq, num_jobs)] > 0)
+    pos = jnp.cumsum(live, axis=1) - 1
+    w_rows = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[:, None], (W, R))
+    out = (
+        jnp.full((W, R), num_jobs, jnp.int32)
+        .at[w_rows, jnp.where(live, pos, R)]
+        .set(resq, mode="drop")
+    )
+    return out, jnp.sum(live, axis=1, dtype=jnp.int32)
+
+
+def queue_head_pick(
+    resq: jax.Array, active: jax.Array, match_fn: MatchFn, num_jobs: int
+) -> jax.Array:
+    """int32[W] — each worker's head-of-queue job (J = none): the first
+    active entry of its compacted, job-id-ordered queue, i.e. the
+    earliest-submitted job with pending work holding a reservation here.
+
+    Expressed as rank-and-select with ``n = 1`` per worker row so the
+    pick runs through the same primitive as megha's GM match — the jnp
+    cumsum reference on CPU, the batched Pallas kernel on TPU (pass a
+    ``match_fn`` built with ``block_rows=1``: queue rows are R ≲ 64 wide,
+    and the kernel pads rows to ``block_rows * 128`` lanes).
+    """
+    W = resq.shape[0]
+    ranks = match_fn(active, jnp.ones(W, jnp.int32))    # int32[W, R]
+    picked = ranks == 0
+    slot = jnp.argmax(picked, axis=1)
+    head = jnp.take_along_axis(resq, slot[:, None], axis=1)[:, 0]
+    return jnp.where(jnp.any(picked, axis=1), head, num_jobs)
 
 
 def make_sparrow_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
-    probes: jax.Array,
+    key: jax.Array,
+    match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
 ) -> Callable[[SparrowState], SparrowState]:
     """Build the jittable one-round transition function.
 
+    Round order: fault transitions -> queue recycling/compaction ->
+    windowed probe insertion -> late binding (idle workers serve their
+    queue heads, orphaned jobs rescued by any idle worker).
+
     With ``faults``, crashed workers lose their in-flight task (it simply
     re-pends — late binding has no head pointer to roll back) and read
-    busy until recovery, so they never serve reservations; a job whose
-    every probed worker is currently dead is *orphaned* and temporarily
-    served by any idle worker (the round-space stand-in for re-probing
-    after RPC timeouts — without it a never-recovering probe set would
-    strand the job).  ``faults=None`` builds the fault-free program; an
-    empty schedule is bit-identical to it.
+    busy until recovery, so they never serve reservations; a pending job
+    whose every queue entry sits on a currently-dead worker is *orphaned*
+    and temporarily served by any idle worker (the round-space stand-in
+    for re-probing after RPC timeouts — without it a never-recovering
+    reservation set would strand the job).  ``faults=None`` builds the
+    fault-free program; an empty schedule is bit-identical to it.
     """
+    if match_fn is None:
+        match_fn = default_match_fn()
     W = cfg.num_workers
     T = tasks.num_tasks
     J = tasks.num_jobs
-    d = cfg.probe_ratio
-    j_col = jnp.arange(J, dtype=jnp.int32)[:, None]
+    edge_job, edge_worker, edge_end, P, C = build_probe_edges(key, cfg, tasks)
+    job_submit_pad = jnp.concatenate([tasks.job_submit, jnp.float32([jnp.inf])])
+    j_idx = jnp.arange(J, dtype=jnp.int32)
     # tasks are exported contiguously per job: cumulative task count before
     # each job gives the within-job pending rank via one global cumsum
     job_start = jnp.concatenate(
@@ -128,41 +356,43 @@ def make_sparrow_step(
             )
             lost = lost + n_lost
 
-        # -- 1. new arrivals place their probes -----------------------------
-        job_seen = tasks.job_submit <= t                            # bool[J]
-        newly = job_seen & ~s.probed
-        # distinct sampling caps a job's probes at W (matches probe_mask and
-        # the event backend's rng.sample of min(d*n, W) workers)
-        n_probes = jnp.sum(
-            jnp.where(newly, jnp.minimum(d * tasks.job_ntasks, W), 0),
-            dtype=jnp.int32,
-        )
-        probes_ctr = s.probes + n_probes
-        messages = s.messages + n_probes
+        # -- 0. recycle completed jobs' slots, compact the queues -----------
+        resq, fill = compact_queues(s.resq, task_finish0, tasks.job, t, J)
 
-        # -- 2. late binding: idle workers serve reservations ---------------
+        # -- 1. windowed probe insertion (edge list is in arrival order) ----
+        win_j, win_w, lead, ins, lagged = probe_window_slice(
+            edge_job, edge_worker, s.probe_head, C, job_submit_pad, t
+        )
+        resq, n_over = insert_probes(resq, fill, win_w, win_j, ins)
+        head = s.probe_head + lead
+        # a ready edge left beyond the window means the burst outran it:
+        # count the round so the probe latency is observable (insert_window)
+        lag = s.probe_lag + lagged.astype(jnp.int32)
+        # every probe RPC counts (and costs a message), kept or dropped
+        probes_ctr = s.probes + lead
+        messages = s.messages + lead
+
+        # -- 2. late binding: idle workers serve their queue heads ----------
         pend_task = jnp.isinf(task_finish0) & (tasks.submit <= t)   # bool[T]
         pending = (
-            jnp.zeros(J, jnp.int32)
+            jnp.zeros(J + 1, jnp.int32)
             .at[tasks.job]
             .add(pend_task.astype(jnp.int32))
-        )                                                           # int32[J]
-        if faults is None:
-            active = probes & (pending > 0)[:, None] & job_seen[:, None]
-        else:
-            # orphan rescue: a pending job with every probed worker dead may
-            # be served by any idle worker (dead workers themselves never
-            # serve: worker_finish holds their recovery time)
-            dead = worker_dead(faults, t)                           # bool[W]
-            has_live = jnp.any(probes & ~dead[None, :], axis=1)     # bool[J]
-            orphan = job_seen & (pending > 0) & ~has_live
-            active = (
-                (probes | orphan[:, None])
-                & (pending > 0)[:, None]
-                & job_seen[:, None]
-            )
-        # FIFO reservation queue: earliest job (lowest index) wins the worker
-        job_pick = jnp.min(jnp.where(active, j_col, J), axis=0)     # int32[W]
+        )
+        active = (resq < J) & (pending[jnp.minimum(resq, J)] > 0)   # bool[W,R]
+        job_pick = queue_head_pick(resq, active, match_fn, J)       # int32[W]
+        # orphan rescue: an inserted pending job with no live reservation
+        # anywhere (all probes dropped on full queues, or — under faults —
+        # every probed worker currently dead) may be served by any idle
+        # worker (dead workers never serve: worker_finish holds recovery)
+        dead = worker_dead(faults, t) if faults is not None else None
+        orphan = (
+            (edge_end <= head)
+            & (pending[:-1] > 0)
+            & ~jobs_with_reservation(resq, J, dead=dead)
+        )
+        rescue = jnp.min(jnp.where(orphan, j_idx, J))
+        job_pick = jnp.minimum(job_pick, rescue)
         idle = worker_finish0 <= t
         launch, task_pick = late_bind(
             jnp.where(idle, job_pick, J), pend_task, tasks.job, job_start
@@ -182,7 +412,10 @@ def make_sparrow_step(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
-            probed=s.probed | newly,
+            resq=resq,
+            probe_head=head,
+            res_overflow=s.res_overflow + n_over,
+            probe_lag=lag,
             probes=probes_ctr,
             messages=messages,
             lost=lost,
@@ -196,11 +429,12 @@ def simulate_fixed(
     tasks: TaskArrays,
     seed: jax.Array | int,
     num_rounds: int,
+    match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
 ) -> SparrowState:
     """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed)."""
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    step = make_sparrow_step(cfg, tasks, probe_mask(key, cfg, tasks), faults=faults)
-    state = init_sparrow_state(cfg, tasks.num_tasks, tasks.num_jobs)
+    step = make_sparrow_step(cfg, tasks, key, match_fn, faults=faults)
+    state = init_sparrow_state(cfg, tasks)
     state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
     return state

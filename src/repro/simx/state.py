@@ -29,6 +29,7 @@ completions only matter for freeing workers, detected elementwise by
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 
 import jax
@@ -117,6 +118,11 @@ class SimxConfig:
     group_size: int = 40
     reserved_per_group: int = 2      # high-priority-only workers per group
     wfq_weight: int = 4              # one low-priority task per `weight` high
+    # sparrow/eagle capped per-worker reservation queues (O(W * R) state,
+    # replacing the dense [J, W] probe masks): queue slots per worker and
+    # probe-insertion window width; 0 = auto (see queue_cap/insert_window)
+    reserve_cap: int = 0
+    probe_window: int = 0
     seed: int = 0
 
     def validate_megha_grid(self) -> None:
@@ -157,6 +163,71 @@ class SimxConfig:
         """Fixed worker groups; the last group absorbs the remainder
         (mirrors ``PigeonConfig.num_groups`` + the coordinator layout)."""
         return max(1, self.num_workers // self.group_size)
+
+    # -- sparrow/eagle reservation queues -------------------------------
+    def queue_cap(self, num_edges: int) -> int:
+        """R — reservation-queue slots per worker.
+
+        Auto (``reserve_cap == 0``): twice the average number of probes a
+        worker receives over the whole trace, floored at 8 so short traces
+        keep slack for in-flight overlap and capped at 64 so the carried
+        state stays O(W) regardless of trace length.  Reservations only
+        occupy a slot while their job is incomplete, so the concurrent
+        fill is set by the in-flight job overlap (load), not the job
+        count; a full queue drops the probe into ``res_overflow`` and the
+        orphan-rescue path keeps the job schedulable."""
+        if self.reserve_cap:
+            return int(self.reserve_cap)
+        avg = math.ceil(num_edges / max(self.num_workers, 1))
+        return int(min(max(8, 2 * avg), 64))
+
+    def insert_window(self, num_edges: int, kmax: int) -> int:
+        """C — probe edges examined per round by the windowed insertion
+        (the megha FIFO-window trick applied to the probe edge list, so
+        per-round insertion cost never scales with the trace length).
+
+        Auto (``probe_window == 0``): at least four max-size jobs' worth
+        of probes plus 1/32nd of the full edge list, so even if the whole
+        trace arrived at once the backlog drains within ~32 rounds.
+        Arrival times are traced (vmapped) values, so no static window
+        can provably match every burst; a saturated window only delays
+        the tail probes to later rounds — the ``probe_lag`` counter
+        records saturated rounds so the distortion is observable, and
+        ``probe_window`` overrides the auto choice."""
+        if num_edges <= 0:
+            return 1
+        if self.probe_window:
+            return int(min(self.probe_window, num_edges))
+        return int(min(num_edges, max(256, 4 * kmax, math.ceil(num_edges / 32))))
+
+
+def probe_edge_layout(
+    cfg: SimxConfig, tasks: TaskArrays, short_only: bool = False
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Concrete (python-level) layout of the probe *edge list* — every
+    (job, probe) pair the trace will ever send, sorted by job id (== job
+    submit order, so arrival readiness is a prefix of the list).
+
+    Job j contributes ``k_j = min(probe_ratio * n_tasks_j, W)`` edges
+    (``short_only`` zeroes the long jobs for eagle).  Returns
+    ``(edge_job int32[P], edge_rank int32[P], edge_end int32[J], kmax)``:
+    ``edge_rank`` is the within-job probe index (the column into the
+    sampled target table) and ``edge_end[j]`` the exclusive end of j's
+    edge range, so ``edge_end[j] <= head`` means j's probes are all
+    inserted.  Shapes are trace-structural only — safe to close over under
+    ``vmap`` (the sampled *targets* are traced separately)."""
+    n = np.asarray(tasks.job_ntasks, np.int64)
+    k = np.minimum(cfg.probe_ratio * n, cfg.num_workers)
+    if short_only:
+        k = np.where(
+            np.asarray(tasks.job_est) < cfg.long_threshold, k, 0
+        )
+    edge_job = np.repeat(np.arange(n.size, dtype=np.int32), k)
+    edge_end = np.cumsum(k)
+    starts = (edge_end - k)[edge_job]
+    edge_rank = (np.arange(edge_job.size) - starts).astype(np.int32)
+    kmax = int(k.max()) if k.size else 0
+    return edge_job, edge_rank, edge_end.astype(np.int32), kmax
 
 
 def _common_fields(cfg: SimxConfig, num_tasks: int) -> dict:
@@ -217,28 +288,44 @@ def init_megha_state(cfg: SimxConfig, num_tasks: int) -> MeghaState:
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class SparrowState:
-    """Scan carry for the sparrow transition rule."""
+    """Scan carry for the sparrow transition rule.
+
+    Probe/reservation state is the capped per-worker queue ``resq`` —
+    ``int32[W, R]`` of job ids (J = empty slot), O(W) regardless of trace
+    length — plus the insertion head into the static probe edge list.
+    """
 
     t: jax.Array
     rnd: jax.Array
     task_finish: jax.Array
     worker_finish: jax.Array
-    worker_task: jax.Array  # int32[W] — last task launched here (T = none)
-    probed: jax.Array     # bool[J] — job's batch-sampling probes placed
+    worker_task: jax.Array    # int32[W] — last task launched here (T = none)
+    resq: jax.Array           # int32[W, R] — reservation queues (J = empty),
+                              # compacted each round, ascending job id
+    probe_head: jax.Array     # int32[] — inserted prefix of the edge list
+    res_overflow: jax.Array   # int32[] — probes dropped on full queues
+    probe_lag: jax.Array      # int32[] — rounds the insertion window
+                              # saturated (arrival burst outran it)
     inconsistencies: jax.Array
     repartitions: jax.Array
     messages: jax.Array
     probes: jax.Array
-    lost: jax.Array       # int32[] — tasks lost to worker crashes
+    lost: jax.Array           # int32[] — tasks lost to worker crashes
 
     def replace(self, **kw) -> "SparrowState":
         return dataclasses.replace(self, **kw)
 
 
-def init_sparrow_state(cfg: SimxConfig, num_tasks: int, num_jobs: int) -> SparrowState:
+def init_sparrow_state(cfg: SimxConfig, tasks: TaskArrays) -> SparrowState:
+    num_jobs = tasks.num_jobs
+    *_, edge_end, _kmax = probe_edge_layout(cfg, tasks)
+    cap = cfg.queue_cap(int(edge_end[-1]) if num_jobs else 0)
     return SparrowState(
-        probed=jnp.zeros(num_jobs, jnp.bool_),
-        **_common_fields(cfg, num_tasks),
+        resq=jnp.full((cfg.num_workers, cap), num_jobs, jnp.int32),
+        probe_head=jnp.int32(0),
+        res_overflow=jnp.int32(0),
+        probe_lag=jnp.int32(0),
+        **_common_fields(cfg, tasks.num_tasks),
     )
 
 
@@ -253,9 +340,12 @@ class EagleState:
     worker_finish: jax.Array
     worker_task: jax.Array   # int32[W] — last task launched here (T = none);
                              # running long iff busy & its task's job is long
-    probed: jax.Array        # bool[J] — short job's probes placed
-    reserv: jax.Array        # bool[J, W] — live reservation mask (post-SSS
-                             # re-routing; rows are filled at arrival rounds)
+    resq: jax.Array          # int32[W, R] — short-job reservation queues
+                             # (J = empty; post-SSS re-routed targets)
+    probe_head: jax.Array    # int32[] — inserted prefix of the edge list
+    res_overflow: jax.Array  # int32[] — probes dropped on full queues
+    probe_lag: jax.Array     # int32[] — rounds the insertion window
+                             # saturated (arrival burst outran it)
     long_head: jax.Array     # int32[] — launched prefix of the central FIFO
     inconsistencies: jax.Array
     repartitions: jax.Array
@@ -267,12 +357,17 @@ class EagleState:
         return dataclasses.replace(self, **kw)
 
 
-def init_eagle_state(cfg: SimxConfig, num_tasks: int, num_jobs: int) -> EagleState:
+def init_eagle_state(cfg: SimxConfig, tasks: TaskArrays) -> EagleState:
+    num_jobs = tasks.num_jobs
+    *_, edge_end, _kmax = probe_edge_layout(cfg, tasks, short_only=True)
+    cap = cfg.queue_cap(int(edge_end[-1]) if num_jobs else 0)
     return EagleState(
-        probed=jnp.zeros(num_jobs, jnp.bool_),
-        reserv=jnp.zeros((num_jobs, cfg.num_workers), jnp.bool_),
+        resq=jnp.full((cfg.num_workers, cap), num_jobs, jnp.int32),
+        probe_head=jnp.int32(0),
+        res_overflow=jnp.int32(0),
+        probe_lag=jnp.int32(0),
         long_head=jnp.int32(0),
-        **_common_fields(cfg, num_tasks),
+        **_common_fields(cfg, tasks.num_tasks),
     )
 
 

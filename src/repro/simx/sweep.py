@@ -25,9 +25,14 @@ the grid axis is fault *severity* instead of load — a batched
 through ``simulate_fixed`` exactly like the submit-time arrays do, so a
 whole availability study is again one compiled program per scheduler.
 
-Both drivers pre-flight the dense ``[J, W]`` probe/reservation memory the
-sparrow/eagle rules materialize per grid point and fail fast with an
-actionable message instead of OOMing mid-compile (``check_probe_memory``).
+Both drivers pre-flight the probe/reservation memory the sparrow/eagle
+rules materialize per grid point and fail fast with an actionable message
+instead of OOMing mid-compile (``check_probe_memory``).  With the capped
+per-worker reservation-queue encoding the footprint is O(W * R) carried
+state plus O(d * T) static probe-edge constants per point — independent
+of the job count for the carried part, and of the same order as the task
+arrays for the constants — so the old multi-GiB dense [J, W] ceiling is
+retired and the guard only trips on pathological configurations.
 """
 
 from __future__ import annotations
@@ -65,7 +70,10 @@ SIMULATE_FIXED: dict[str, Callable] = {
 def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
     """Reduce one finished state to the Fig. 2 / Fig. 4 observables, inside
     jit: p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs),
-    completion counts, and the crash-loss counter."""
+    completion counts, the crash-loss counter, and the reservation-queue
+    health counters (0 for megha/pigeon, which carry no queues) — a
+    nonzero ``res_overflow`` or ``probe_lag`` flags a point whose delays
+    are distorted by a too-small ``reserve_cap`` / ``probe_window``."""
     done = state.task_finish <= state.t
     fin = jnp.where(done, state.task_finish, jnp.inf)
     job_finish = jnp.full(tasks.num_jobs, -jnp.inf).at[tasks.job].max(fin)
@@ -78,22 +86,44 @@ def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
         "jobs_done": jnp.sum(jnp.isfinite(job_finish), dtype=jnp.int32),
         "tasks_done": jnp.sum(done, dtype=jnp.int32),
         "lost": state.lost,
+        "res_overflow": getattr(state, "res_overflow", jnp.int32(0)),
+        "probe_lag": getattr(state, "probe_lag", jnp.int32(0)),
     }
 
 
-#: Rough resident bytes per [J, W] element per grid point for the dense
-#: probe/reservation machinery (masks + the int32 late-binding slot/serve
-#: intermediates); megha/pigeon carry no [J, W] state.
-_JW_BYTES_PER_ELEM = {"sparrow": 12, "eagle": 18}
+#: Dense-era [J, W] bytes/element (masks + int32 late-binding
+#: intermediates) — kept only so benchmarks/docs can report what the
+#: retired encoding *would* have needed.
+DENSE_JW_BYTES_PER_ELEM = {"sparrow": 12, "eagle": 18}
 
 
 def probe_memory_bytes(
-    scheduler: str, num_jobs: int, num_workers: int, n_points: int
+    scheduler: str,
+    num_jobs: int,
+    num_workers: int,
+    n_points: int,
+    tasks_per_job: int = 1000,
+    probe_ratio: int = 2,
+    reserve_cap: int = 0,
 ) -> int:
-    """Estimated peak bytes of dense [J, W] probe/reservation state a
-    compiled (vmapped) grid materializes; 0 for schedulers without it."""
-    per = _JW_BYTES_PER_ELEM.get(scheduler.lower(), 0)
-    return per * num_jobs * num_workers * n_points
+    """Estimated peak bytes of reservation-queue probe state a compiled
+    (vmapped) grid materializes; 0 for schedulers without probes.
+
+    Per point: the carried ``int32[W, R]`` queue plus its per-round
+    compaction/scatter intermediates (~3 int32 copies), and the static
+    probe-target edge constants, O(d * T) int32 (target table + flat edge
+    list) — seed-dependent, so vmapped per point.  Independent of the job
+    count except through the edge constants, which scale with the trace
+    exactly like the task arrays themselves.
+    """
+    if scheduler.lower() not in DENSE_JW_BYTES_PER_ELEM:
+        return 0
+    num_edges = num_jobs * min(probe_ratio * tasks_per_job, num_workers)
+    cap = SimxConfig(
+        num_workers=num_workers, probe_ratio=probe_ratio, reserve_cap=reserve_cap
+    ).queue_cap(num_edges)
+    per_point = 12 * num_workers * cap + 8 * num_edges
+    return per_point * n_points
 
 
 def check_probe_memory(
@@ -102,28 +132,33 @@ def check_probe_memory(
     num_workers: int,
     n_points: int,
     limit_bytes: Optional[float],
+    **kw,
 ) -> int:
-    """Log the [J, W] memory estimate and fail fast when it exceeds
-    ``limit_bytes`` (None disables), instead of OOMing mid-compile."""
-    est = probe_memory_bytes(scheduler, num_jobs, num_workers, n_points)
+    """Log the reservation-queue memory estimate and fail fast when it
+    exceeds ``limit_bytes`` (None disables), instead of OOMing mid-compile.
+
+    With the [W, R] encoding the estimate is MBs where the dense [J, W]
+    one was GiBs, so the default ``mem_limit_gb`` ceiling no longer binds
+    at paper scale and the guard survives only as a safety valve for
+    pathological configurations (huge explicit ``reserve_cap``, enormous
+    grids)."""
+    est = probe_memory_bytes(scheduler, num_jobs, num_workers, n_points, **kw)
     if not est:
         return est
     log.info(
-        "%s grid: ~%.2f GiB dense [J=%d, W=%d] probe/reservation state "
+        "%s grid: ~%.1f MiB reservation-queue state (J=%d, W=%d) "
         "across %d vmapped points",
-        scheduler, est / 2**30, num_jobs, num_workers, n_points,
+        scheduler, est / 2**20, num_jobs, num_workers, n_points,
     )
     if limit_bytes is not None and est > limit_bytes:
         raise RuntimeError(
-            f"{scheduler} sweep needs ~{est / 2**30:.1f} GiB of dense "
-            f"[J={num_jobs}, W={num_workers}] probe/reservation state over "
+            f"{scheduler} sweep needs ~{est / 2**30:.2f} GiB of "
+            f"reservation-queue state (J={num_jobs}, W={num_workers}) over "
             f"{n_points} vmapped grid points, above the "
-            f"{limit_bytes / 2**30:.1f} GiB limit. Shrink the grid "
-            "(fewer loads/fractions/seeds per call), split the job list "
-            "into batches of sweeps, or raise mem_limit_gb if the host "
-            "really has the RAM. megha/pigeon carry no [J, W] state and "
-            "sweep at any scale; the events backend handles single "
-            "fault/correctness runs of any job count."
+            f"{limit_bytes / 2**30:.2f} GiB limit. Shrink the grid (fewer "
+            "loads/fractions/seeds per call), lower reserve_cap, or raise "
+            "mem_limit_gb if the host really has the RAM. megha/pigeon "
+            "carry no probe state and sweep at any scale."
         )
     return est
 
@@ -165,6 +200,23 @@ def make_load_grid(
     return template, jnp.stack(submit), jnp.stack(job_submit)
 
 
+def _sim_kwargs(name: str, match_fn, pick_fn) -> dict:
+    """Route the rank-and-select implementations to the right call sites:
+    ``match_fn`` is the wide match (megha's GM rows, eagle's central long
+    match, pigeon's group pick); ``pick_fn`` is the narrow [W, R]
+    head-of-queue pick of the sparrow/eagle reservation queues, which on
+    TPU wants ``default_match_fn(..., block_rows=1)`` (sparrow has no wide
+    match, so its ``match_fn`` argument IS the pick).  With ``pick_fn``
+    omitted, BOTH queue schedulers fall back to the jnp reference — never
+    to the wide ``match_fn``, whose kernel tile would pad every R ≲ 64
+    queue row to ``block_rows * 128`` lanes."""
+    if name == "sparrow":
+        return {"match_fn": pick_fn}
+    if name == "eagle":
+        return {"match_fn": match_fn, "pick_fn": pick_fn}
+    return {"match_fn": match_fn}
+
+
 def sweep_grid(
     scheduler: str,
     cfg: SimxConfig,
@@ -174,18 +226,19 @@ def sweep_grid(
     seeds: jax.Array,            # int[S]
     num_rounds: int,
     match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
 ) -> dict[str, jax.Array]:
     """Run the whole (load x seed) grid as one jitted vmap-of-vmap program.
 
-    ``match_fn`` selects the rank-and-select implementation for the
-    schedulers that match (megha/eagle/pigeon; see
+    ``match_fn`` / ``pick_fn`` select the rank-and-select implementations
+    (wide match vs. the narrow reservation-queue head pick; see
     ``megha.default_match_fn`` for the Pallas-vs-jnp choice).  Returns
     ``point_summary`` fields stacked to ``[L, S]`` arrays plus the total
     simulated task count (for tasks/sec accounting).
     """
     name = scheduler.lower()
     sim = SIMULATE_FIXED[name]
-    sim_kw = {} if name == "sparrow" else {"match_fn": match_fn}
+    sim_kw = _sim_kwargs(name, match_fn, pick_fn)
 
     def point(sub, jsub, seed):
         tk = dataclasses.replace(tasks, submit=sub, job_submit=jsub)
@@ -223,9 +276,10 @@ def fig2_sweep(
     tasks) at Fig. 2 scale; ``benchmarks/bench_simx.py --full`` drives this
     at 50k workers.  On TPU hosts pass ``use_pallas=True`` (and
     ``interpret=False``) to run the rank-and-select match as a compiled
-    Pallas kernel.  ``mem_limit_gb`` bounds the dense [J, W] probe state
-    sparrow/eagle grids materialize (fail fast, not mid-compile OOM; None
-    disables).
+    Pallas kernel.  ``mem_limit_gb`` bounds the reservation-queue probe
+    state sparrow/eagle grids materialize (fail fast, not mid-compile OOM;
+    None disables) — with the O(W * R) encoding it is MBs per point and
+    the default ceiling never binds at paper scale.
     """
     name = scheduler.lower()
     if name == "megha":
@@ -235,6 +289,9 @@ def fig2_sweep(
     check_probe_memory(
         name, num_jobs, num_workers, len(loads) * num_seeds,
         None if mem_limit_gb is None else mem_limit_gb * 2**30,
+        tasks_per_job=tasks_per_job,
+        probe_ratio=cfg_kwargs.get("probe_ratio", 2),
+        reserve_cap=cfg_kwargs.get("reserve_cap", 0),
     )
     cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
     tasks, submit_g, job_submit_g = make_load_grid(
@@ -257,6 +314,9 @@ def fig2_sweep(
     out = sweep_grid(
         name, cfg, tasks, submit_g, job_submit_g, jnp.arange(num_seeds), num_rounds,
         match_fn=simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret),
+        pick_fn=simx_megha.default_match_fn(
+            use_pallas=use_pallas, interpret=interpret, block_rows=1
+        ),
     )
     res = {k: np.asarray(v) for k, v in out.items()}
     res["loads"] = np.asarray(loads)
@@ -273,6 +333,7 @@ def fault_sweep_grid(
     seeds: jax.Array,             # int[S]
     num_rounds: int,
     match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
 ) -> dict[str, jax.Array]:
     """Run a (fault severity x seed) grid as one jitted vmap-of-vmap
     program — the Fig. 4 counterpart of ``sweep_grid``.  Returns
@@ -280,7 +341,7 @@ def fault_sweep_grid(
     the in-flight tasks crashes destroyed per point)."""
     name = scheduler.lower()
     sim = SIMULATE_FIXED[name]
-    sim_kw = {} if name == "sparrow" else {"match_fn": match_fn}
+    sim_kw = _sim_kwargs(name, match_fn, pick_fn)
 
     def point(fs, seed):
         return point_summary(
@@ -337,6 +398,9 @@ def fig4_sweep(
     check_probe_memory(
         name, num_jobs, num_workers, len(fractions) * num_seeds,
         None if mem_limit_gb is None else mem_limit_gb * 2**30,
+        tasks_per_job=tasks_per_job,
+        probe_ratio=cfg_kwargs.get("probe_ratio", 2),
+        reserve_cap=cfg_kwargs.get("reserve_cap", 0),
     )
     cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
     tasks = export_workload(
@@ -369,6 +433,9 @@ def fig4_sweep(
     out = fault_sweep_grid(
         name, cfg, tasks, schedules, jnp.arange(num_seeds), num_rounds,
         match_fn=simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret),
+        pick_fn=simx_megha.default_match_fn(
+            use_pallas=use_pallas, interpret=interpret, block_rows=1
+        ),
     )
     res = {k: np.asarray(v) for k, v in out.items()}
     res["fractions"] = np.asarray(fractions)

@@ -6,3 +6,15 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def require_or_skip_hypothesis():
+    """Skip a hypothesis-based module when the package is missing locally —
+    but hard-fail when REQUIRE_HYPOTHESIS is set (CI sets it, so the
+    property suites can never silently report "skipped" there)."""
+    import pytest
+
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        import hypothesis  # noqa: F401 — ImportError here IS the failure
+    else:
+        pytest.importorskip("hypothesis")

@@ -6,7 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_or_skip_hypothesis
+
+require_or_skip_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fastpath as FP

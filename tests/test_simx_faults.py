@@ -315,22 +315,30 @@ def test_recovered_gm_drops_predecessor_lm_responses():
 
 
 def test_probe_memory_guard_fails_fast():
-    """Satellite: sparrow/eagle dense [J, W] grids are pre-flighted."""
+    """Satellite: the sweep memory model is the O(W * R) reservation-queue
+    footprint — MBs where the dense [J, W] encoding needed GiBs — and the
+    guard survives only as a safety valve."""
     est = simx_sweep.probe_memory_bytes("sparrow", 480, 50_000, 6)
-    assert est > 2**30  # the ROADMAP's ~100 MB/point grid, 6 points
+    dense = simx_sweep.DENSE_JW_BYTES_PER_ELEM["sparrow"] * 480 * 50_000 * 6
+    assert 0 < est < 2**28 < dense  # the ROADMAP's old ~1.7 GiB, now < 256 MB
     assert simx_sweep.probe_memory_bytes("megha", 480, 50_000, 6) == 0
-    with pytest.raises(RuntimeError, match="probe/reservation"):
-        simx_sweep.check_probe_memory("eagle", 480, 50_000, 6, 2**30)
-    # the drivers fail BEFORE building traces or compiling
+    # the paper-scale Fig. 2 grid AND a J-heavy (2000-job) point both clear
+    # the default 16 GiB ceiling now: the carried state no longer scales
+    # with the job count (acceptance criterion for the [W, R] encoding)
+    for j in (480, 2000, 100_000):
+        simx_sweep.check_probe_memory("sparrow", j, 50_000, 6, 16 * 2**30)
+    with pytest.raises(RuntimeError, match="reservation-queue"):
+        simx_sweep.check_probe_memory("eagle", 480, 50_000, 6, 2**20)
+    # the drivers still fail BEFORE building traces or compiling
     with pytest.raises(RuntimeError, match="mem_limit_gb"):
         simx_sweep.fig2_sweep(
             "sparrow", loads=(0.5,), num_seeds=1, num_workers=50_000,
-            num_jobs=480, tasks_per_job=1000, mem_limit_gb=0.125,
+            num_jobs=480, tasks_per_job=1000, mem_limit_gb=0.001,
         )
     with pytest.raises(RuntimeError, match="mem_limit_gb"):
         simx_sweep.fig4_sweep(
             "eagle", fractions=(0.0, 0.1), num_seeds=2, num_workers=50_000,
-            num_jobs=480, tasks_per_job=1000, mem_limit_gb=0.5,
+            num_jobs=480, tasks_per_job=1000, mem_limit_gb=0.001,
         )
 
 
