@@ -15,22 +15,27 @@ Two sections:
    dt=0.05 (the engine default, 5% of the 1 s task duration) and dt=0.1
    (coarser quantization, ~2x the throughput — fine for relative sweeps).
 
-2. **Fig. 2 grid** (all four schedulers) — the ``repro.simx.sweep``
-   driver compiles a whole (seed x load) grid into ONE vmapped program per
-   scheduler and reports aggregate tasks/sec over the grid plus the
-   highest-load p50 job delay.  Default is a small CI-sized grid;
-   ``--full`` runs the paper-scale grid — 50k workers, jobs of 1000
-   one-second tasks (Table 1's synthetic trace) — and takes hours on CPU
-   (see docs/fig2_sweep.md for expected runtimes and how to read the
-   output against the paper's plots).
+2. **Fig. 2 grid** (every registered rule — the four paper schedulers
+   plus the omniscient oracle) — the ``repro.simx.sweep`` driver compiles
+   a whole (seed x load) grid into ONE vmapped program per scheduler and
+   reports aggregate tasks/sec over the grid plus the highest-load p50
+   job delay.  Default is a small CI-sized grid; ``--full`` runs the
+   paper-scale grid — 50k workers, jobs of 1000 one-second tasks
+   (Table 1's synthetic trace) — and takes hours on CPU (see
+   docs/fig2_sweep.md for expected runtimes and how to read the output
+   against the paper's plots).
 
 3. **Fig. 4 fault grid** — the default grid always carries one
    ``simx_fig4_smoke`` row (a tiny megha severity grid, so the fault path
    can't silently rot in CI); ``--faults`` adds the full
-   (fraction x seed) availability grid for all four schedulers
+   (fraction x seed) availability grid for every registered rule
    (``repro.simx.sweep.fig4_sweep``; recipe in docs/fig4_faults.md).
    ``--only-faults`` (module CLI) prints just the fault rows — the CI
-   smoke entrypoint.
+   smoke entrypoint.  Two more always-on rows: ``simx_oracle_gap``
+   (``--only-oracle``) reports each scheduler's p50/p95 partial-knowledge
+   gap vs the omniscient-oracle lower bound on a shared grid point, and
+   ``simx_doneprobe`` records the dispatch overhead saved by returning
+   the chunk runner's all-done flag from inside the jitted chunk.
 
 4. **J-heavy queue-encoding rows** — one sparrow + one eagle point at
    32768 jobs x 50k workers, a (jobs, workers) product whose dense
@@ -102,7 +107,7 @@ def _simx_point(wl, workers: int, dt: float) -> dict:
     step = sxm.make_megha_step(cfg, tasks, orders)
     state0 = init_megha_state(cfg, tasks.num_tasks)
     cap = sxe.estimate_rounds(cfg, tasks)
-    runner = sxe.make_chunk_runner(step, chunk=32)
+    runner = sxe.make_chunk_runner(step, chunk=32)  # returns (state, done)
     t0 = time.time()
     jax.block_until_ready(runner(state0))
     compile_wall = time.time() - t0
@@ -137,8 +142,10 @@ def _sweep_rows(full: bool) -> list[str]:
     return rows
 
 
-def _fault_rows(full: bool, schedulers=sxe.SCHEDULERS) -> list[str]:
+def _fault_rows(full: bool, schedulers=None) -> list[str]:
     """Section 3: one vmapped (fraction x seed) Fig. 4 grid per scheduler."""
+    if schedulers is None:
+        schedulers = sxe.SCHEDULERS  # resolve the live registry at call time
     spec = dict(FAULTS_FULL if full else FAULTS)
     gm_outages = spec.pop("gm_outages")
     megha_kw = dict(num_gms=4, num_lms=4, heartbeat_interval=1.0)
@@ -221,6 +228,90 @@ def _bigjob_rows() -> list[str]:
     return rows
 
 
+def _doneprobe_row() -> list[str]:
+    """Satellite record: ``make_chunk_runner`` now returns its all-done
+    flag from inside the jitted chunk, so ``run_to_completion``'s host
+    loop reads one ready scalar instead of dispatching a second device
+    program (``jnp.all``) per chunk.  This row times both probe styles on
+    the same compiled chunk runner (µs per chunk, warm)."""
+    import jax.numpy as jnp
+
+    from repro.simx.state import init_megha_state as init
+
+    wl = synthetic_trace(
+        num_jobs=16, tasks_per_job=64, load=0.8, num_workers=1024, seed=13
+    )
+    cfg = SimxConfig(num_workers=1024, dt=0.05)
+    tasks = export_workload(wl)
+    orders = sxm.gm_orders(jax.random.PRNGKey(0), cfg)
+    step = sxm.make_megha_step(cfg, tasks, orders)
+    state0 = init(cfg, tasks.num_tasks)
+    runner = sxe.make_chunk_runner(step, chunk=8)
+    probe = jax.jit(lambda s: jnp.all(s.task_finish <= s.t))
+    s, d = runner(state0)
+    jax.block_until_ready((s, d))
+    bool(probe(s))  # warm both programs
+    # isolate the probe itself (the chunk advance is identical either
+    # way): run the chunks first and probe FRESH device arrays — a jax
+    # scalar caches its host value after the first bool(), so re-reading
+    # one flag would time a Python attribute lookup, not the transfer
+    reps = 100
+    states, flags = [], []
+    s = state0
+    for _ in range(reps):
+        s, d = runner(s)
+        states.append(s)
+        flags.append(d)
+    jax.block_until_ready(flags)
+    t0 = time.time()
+    for d in flags:
+        bool(d)                      # fused: one scalar transfer per chunk
+    fused = (time.time() - t0) / reps
+    t0 = time.time()
+    for s in states:
+        bool(probe(s))               # retired: second dispatch per chunk
+    two = (time.time() - t0) / reps
+    return [
+        f"simx_doneprobe,{fused * 1e6:.2f},"
+        f"fused_probe_us_per_chunk={fused * 1e6:.1f};"
+        f"second_dispatch_us_per_chunk={two * 1e6:.1f};"
+        f"saved_us_per_chunk={max(two - fused, 0.0) * 1e6:.1f}"
+    ]
+
+
+#: The oracle-gap smoke grid: one shared (load x seed) point, small enough
+#: for every PR, queueing-dominated enough for a visible gap.
+ORACLE_GAP = dict(
+    loads=(0.8,), num_seeds=1, num_workers=256, num_jobs=16,
+    tasks_per_job=64, dt=0.05,
+)
+
+
+def _oracle_gap_row() -> list[str]:
+    """The always-on oracle smoke: p50/p95 partial-knowledge gap of megha
+    and sparrow vs the omniscient-oracle lower bound on one shared grid
+    point — the paper's Fig. 2 argument as a per-PR number (and the CI
+    guarantee that the oracle rule keeps compiling)."""
+    t0 = time.time()
+    oracle = sxs.fig2_sweep("oracle", **ORACLE_GAP)
+    megha = sxs.fig2_sweep(
+        "megha", num_gms=4, num_lms=4, heartbeat_interval=1.0, **ORACLE_GAP
+    )
+    sparrow = sxs.fig2_sweep("sparrow", **ORACLE_GAP)
+    wall = time.time() - t0
+    o50, o95 = float(oracle["p50"][0, 0]), float(oracle["p95"][0, 0])
+    done = int(np.sum(oracle["tasks_done"]))
+    return [
+        f"simx_oracle_gap,{wall:.2f},"
+        f"oracle_p50={o50:.3f}s;oracle_p95={o95:.3f}s;"
+        f"megha_gap_p50={float(megha['p50'][0, 0]) - o50:.3f}s;"
+        f"megha_gap_p95={float(megha['p95'][0, 0]) - o95:.3f}s;"
+        f"sparrow_gap_p50={float(sparrow['p50'][0, 0]) - o50:.3f}s;"
+        f"sparrow_gap_p95={float(sparrow['p95'][0, 0]) - o95:.3f}s;"
+        f"done={done}/{int(oracle['num_tasks'])}"
+    ]
+
+
 def _fault_smoke_row() -> list[str]:
     """The always-on smoke: a minimal megha severity grid exercising the
     fault path (crash wave + GM window + recovery) end to end."""
@@ -267,6 +358,8 @@ def run(full: bool = False, faults: bool = False) -> list[str]:
     rows.extend(_sweep_rows(full))
     if full:  # 50k-worker compiles: minutes of wall clock, like the rest of --full
         rows.extend(_bigjob_rows())
+    rows.extend(_doneprobe_row())
+    rows.extend(_oracle_gap_row())
     rows.extend(_fault_smoke_row())
     if faults:
         rows.extend(_fault_rows(full))
@@ -284,11 +377,16 @@ if __name__ == "__main__":
                     help="print just the fault rows (the CI smoke entrypoint)")
     ap.add_argument("--only-bigjob", action="store_true",
                     help="print just the J-heavy queue-encoding rows")
+    ap.add_argument("--only-oracle", action="store_true",
+                    help="print just the oracle-gap smoke row (the CI "
+                         "oracle entrypoint)")
     args = ap.parse_args()
     if args.only_faults:
         out = _fault_smoke_row() + (_fault_rows(args.full) if args.faults else [])
     elif args.only_bigjob:
         out = _bigjob_rows()
+    elif args.only_oracle:
+        out = _oracle_gap_row()
     else:
         out = run(full=args.full, faults=args.faults)
     for r in out:

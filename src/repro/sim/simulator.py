@@ -8,8 +8,9 @@ Two interchangeable backends behind one entry point:
   * ``backend="simx"``   — the vectorized JAX backend (``repro.simx``):
     round-synchronous dense-array simulation that jits/vmaps for
     datacenter-scale sweeps; covers the full scheduler matrix (megha,
-    sparrow, eagle, pigeon), with ``repro.simx.sweep`` compiling a whole
-    (seed x load) Fig. 2 grid into one program.
+    sparrow, eagle, pigeon, plus the omniscient-oracle lower bound),
+    with ``repro.simx.sweep`` compiling a whole (seed x load) Fig. 2
+    grid into one program.
 """
 
 from __future__ import annotations
@@ -80,8 +81,10 @@ def run_simulation(
     ``hooks`` remains the low-level escape hatch for arbitrary imperative
     event injection (events backend only).
 
-    ``backend="simx"`` routes to the vectorized JAX backend for any of
-    megha/sparrow/eagle/pigeon; scheduler kwargs (num_gms, num_lms,
+    ``backend="simx"`` routes to the vectorized JAX backend for any
+    registered rule (megha/sparrow/eagle/pigeon/oracle — the last is the
+    omniscient global-knowledge lower bound); scheduler kwargs (num_gms,
+    num_lms,
     heartbeat_interval, seed, probe_ratio, long_threshold,
     short_partition_fraction, num_distributors, group_size,
     reserved_per_group, weight) carry over, plus simx-specific ones

@@ -49,13 +49,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.simx import runtime as rt
 from repro.simx.faults import (
     FaultSchedule,
-    apply_worker_faults,
     jobs_with_reservation,
     worker_dead,
 )
-from repro.simx.megha import MatchFn, default_match_fn
+from repro.simx.runtime import MatchFn, default_match_fn
 from repro.simx.sparrow import (
     build_probe_edges,
     compact_queues,
@@ -149,7 +149,6 @@ def make_eagle_step(
         np.concatenate([long_ids, np.full(CL, T)]).astype(np.int32)
     )
     submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
-    cl_row = jnp.arange(CL, dtype=jnp.int32)
     if faults is not None:
         # task -> central-FIFO position for crash-loss head rollback
         # (short tasks and the T pad map to NL: the min() below ignores them)
@@ -158,30 +157,24 @@ def make_eagle_step(
         long_pos = jnp.asarray(long_pos_np)
 
     def apply_launch(launch, task_pick, start, task_finish, worker_finish, worker_task):
-        lt = jnp.where(launch, task_pick, T)
-        fin = start + dur_pad[jnp.minimum(task_pick, T)]
-        task_finish = task_finish.at[lt].set(fin, mode="drop")
-        worker_finish = jnp.where(launch, fin, worker_finish)
-        worker_task = jnp.where(launch, task_pick, worker_task)
-        return task_finish, worker_finish, worker_task
+        """The shared launch bookkeeping with eagle's trace constants bound."""
+        return rt.apply_launch(
+            launch, task_pick, start, dur_pad,
+            task_finish, worker_finish, worker_task, T,
+        )
 
-    def step(s: EagleState) -> EagleState:
-        t = s.t
-        # -- 0. fault transitions + ground truth (completions implicit) -----
-        task_finish0, worker_finish0 = s.task_finish, s.worker_finish
-        long_head, lost = s.long_head, s.lost
+    def dispatch(s, t, task_finish0, worker_finish0, free, comp, lost_w):
+        # -- 0. crash-loss rollback + ground truth (completions implicit;
+        #       the fault/completion stages ran in the runtime) -------------
+        del free  # idleness is re-derived after the sticky launches
+        long_head = s.long_head
         if faults is not None:
-            task_finish0, worker_finish0, lost_w, n_lost = apply_worker_faults(
-                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
-            )
-            lost = lost + n_lost
             # lost long tasks re-enter the central FIFO: roll the head back
             lt0 = jnp.where(lost_w, s.worker_task, T)
             long_head = jnp.minimum(
                 long_head, jnp.min(long_pos[lt0]) if NL else long_head
             )
         long_here = (worker_finish0 > t) & long_task[s.worker_task]  # bool[W]
-        comp = (worker_finish0 <= t) & (worker_finish0 > t - cfg.dt)
 
         # -- 0b. recycle completed jobs' slots, compact the queues ----------
         resq, fill = compact_queues(s.resq, task_finish0, tasks.job, t, J)
@@ -262,35 +255,27 @@ def make_eagle_step(
             wtask = jax.lax.dynamic_slice(long_fifo, (long_head,), (CL,))
             wsub = submit_pad[jnp.minimum(wtask, T)]
             wsub = jnp.where(wtask >= T, jnp.inf, wsub)
-            fpad = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
-            launched = ~jnp.isinf(fpad[wtask]) | (wtask >= T)   # bool[CL]
+            fpad = rt.finish_pad(task_finish)
+            launched = rt.window_launched(fpad, wtask, T)       # bool[CL]
             queued = ~launched & (wsub <= t)
             nq = jnp.sum(queued, dtype=jnp.int32)
             # sticky launches punch holes mid-window: sort queued positions
             # ahead of the CL sentinels to recover FIFO order
-            fifo = jnp.sort(jnp.where(queued, cl_row, CL))
+            fifo = rt.sorted_fifo(queued, CL)
             avail = ((worker_finish <= t) & (w_row >= R))[None, :]
             ranks = match_fn(avail, nq[None])[0]                # int32[W]
-            sel_pos = fifo[jnp.clip(ranks, 0, CL - 1)]
-            sel_task = jnp.where(
-                ranks >= 0, wtask[jnp.clip(sel_pos, 0, CL - 1)], T
-            )
+            sel_task = rt.select_from_window(ranks, fifo, wtask, T)
             launch3 = sel_task < T
             task_finish, worker_finish, worker_task = apply_launch(
                 launch3, sel_task, start, task_finish, worker_finish, worker_task
             )
             messages = messages + jnp.sum(launch3, dtype=jnp.int32)
             # advance the head past the launched prefix
-            fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
-            launched2 = ~jnp.isinf(fpad2[wtask]) | (wtask >= T)
-            lead2 = jnp.sum(
-                jnp.cumprod(launched2.astype(jnp.int32)), dtype=jnp.int32
-            )
-            long_head = jnp.minimum(long_head + lead2, NL)
+            fpad2 = rt.finish_pad(task_finish)
+            launched2 = rt.window_launched(fpad2, wtask, T)
+            long_head = jnp.minimum(long_head + rt.launched_lead(launched2), NL)
 
-        return s.replace(
-            t=t + cfg.dt,
-            rnd=s.rnd + 1,
+        return dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
@@ -301,10 +286,9 @@ def make_eagle_step(
             long_head=long_head,
             messages=messages,
             probes=probes,
-            lost=lost,
         )
 
-    return step
+    return rt.compose_step(cfg, tasks, dispatch, faults)
 
 
 def simulate_fixed(
@@ -318,8 +302,29 @@ def simulate_fixed(
 ) -> EagleState:
     """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed
     and in the submit-time arrays)."""
-    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    step = make_eagle_step(cfg, tasks, key, match_fn, pick_fn, faults=faults)
-    state = init_eagle_state(cfg, tasks)
-    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
-    return state
+    return rt.simulate_fixed(
+        "eagle", cfg, tasks, seed, num_rounds,
+        match_fn=match_fn, pick_fn=pick_fn, faults=faults,
+    )
+
+
+def _build_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    key: jax.Array,
+    *,
+    match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
+) -> Callable[[EagleState], EagleState]:
+    return make_eagle_step(cfg, tasks, key, match_fn, pick_fn, faults=faults)
+
+
+RULE = rt.register_rule(
+    rt.Rule(
+        name="eagle",
+        init=lambda cfg, tasks: init_eagle_state(cfg, tasks),
+        build_step=_build_step,
+        has_queues=True,
+    )
+)

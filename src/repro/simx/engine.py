@@ -128,42 +128,51 @@ import numpy as np
 from repro.core.base import LONG_JOB_THRESHOLD
 from repro.core.megha import grid_workers
 from repro.core.metrics import JobRecord, RunMetrics, TaskRecord, classify_long
+from repro.simx import runtime
 from repro.simx.faults import FaultPlan, FaultSchedule, is_empty
-from repro.simx import eagle as simx_eagle
-from repro.simx import megha as simx_megha
-from repro.simx import pigeon as simx_pigeon
-from repro.simx import sparrow as simx_sparrow
+
+# importing the rule modules registers them; canonical (paper) order first,
+# then the oracle baseline — the registry preserves registration order
+from repro.simx import megha as simx_megha  # noqa: F401
+from repro.simx import sparrow as simx_sparrow  # noqa: F401
+from repro.simx import eagle as simx_eagle  # noqa: F401
+from repro.simx import pigeon as simx_pigeon  # noqa: F401
+from repro.simx import oracle as simx_oracle  # noqa: F401
+from repro.simx.runtime import scan_rounds  # noqa: F401 — re-export
 from repro.simx.state import (
-    EagleState,
-    MeghaState,
-    PigeonState,
+    CoreState,
     SimxConfig,
-    SparrowState,
     TaskArrays,
     export_workload,
-    init_eagle_state,
-    init_megha_state,
-    init_pigeon_state,
-    init_sparrow_state,
 )
 from repro.workload.traces import Workload
 
-#: Schedulers the simx backend implements — the full Fig. 2 matrix.
-SCHEDULERS = ("megha", "sparrow", "eagle", "pigeon")
-
-
-def scan_rounds(step: Callable, state, num_rounds: int):
-    """Advance ``state`` by ``num_rounds`` rounds under one lax.scan."""
-    state, _ = jax.lax.scan(
-        lambda s, _: (step(s), None), state, None, length=num_rounds
-    )
-    return state
+def __getattr__(name: str):
+    """``SCHEDULERS`` is a LIVE view of the rule registry (the full
+    Fig. 2 matrix plus the omniscient-oracle lower bound, in registration
+    order) — a rule registered after import still shows up, keeping the
+    'registering is all the wiring' contract honest for every driver
+    that iterates it."""
+    if name == "SCHEDULERS":
+        return tuple(runtime.RULES)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def make_chunk_runner(step: Callable, chunk: int = 256) -> Callable:
     """Jit a ``chunk``-round advance of ``step``; reuse it across runs to
-    amortize compilation (a fresh jit per call would recompile)."""
-    return jax.jit(lambda s: scan_rounds(step, s, chunk))
+    amortize compilation (a fresh jit per call would recompile).
+
+    Returns ``(state, all_done bool[])`` — the completion probe is reduced
+    INSIDE the compiled chunk, so ``run_to_completion``'s host check reads
+    one ready scalar instead of dispatching a second device program per
+    chunk (``bench_simx.py`` reports the saved dispatch overhead as the
+    ``simx_doneprobe`` row)."""
+
+    def run(s):
+        s = scan_rounds(step, s, chunk)
+        return s, jnp.all(s.task_finish <= s.t)
+
+    return jax.jit(run)
 
 
 def run_to_completion(
@@ -188,9 +197,13 @@ def run_to_completion(
     rounds = 0
     while rounds < max_rounds:
         n = min(chunk, max_rounds - rounds)
-        state = run_chunk(state) if n == chunk else scan_rounds(step, state, n)
+        if n == chunk:
+            state, done = run_chunk(state)
+        else:
+            state = scan_rounds(step, state, n)
+            done = jnp.all(state.task_finish <= state.t)
         rounds += n
-        if bool(jnp.all(state.task_finish <= state.t)):
+        if bool(done):
             break
     return state
 
@@ -216,7 +229,7 @@ class SimxRun:
     workload_name: str
     cfg: SimxConfig
     tasks: TaskArrays
-    state: MeghaState | SparrowState | EagleState | PigeonState
+    state: CoreState
 
     @property
     def end_time(self) -> float:
@@ -232,23 +245,24 @@ class SimxRun:
         return int(self.state.lost)
 
     def job_finish_times(self) -> np.ndarray:
-        """float64[J] job finish (max task finish; nan if any task unfinished)."""
-        finish = np.asarray(self.state.task_finish, np.float64)
-        # launched-but-unfinished tasks carry a future finish time; treat
-        # anything past the simulated end as not completed
-        finish = np.where(finish <= self.end_time, finish, np.inf)
-        job = np.asarray(self.tasks.job)
-        out = np.full(self.tasks.num_jobs, -np.inf)
-        np.maximum.at(out, job, finish)
+        """float64[J] job finish (max task finish; nan if any task
+        unfinished — a launched-but-unfinished task carries a future
+        finish time, which reads as not completed).  Routed through the
+        runtime's shared in-jit reduction, so this is the SAME computation
+        ``sweep.point_summary`` percentiles inside a compiled grid."""
+        _, job_finish = runtime.job_delays_from_state(
+            self.state.task_finish, self.state.t, self.tasks
+        )
+        out = np.asarray(job_finish, np.float64)
         return np.where(np.isfinite(out), out, np.nan)
 
     def job_delays(self) -> np.ndarray:
-        """float64[J] JCT delay (Eq. 2) for completed jobs, nan otherwise."""
-        return (
-            self.job_finish_times()
-            - np.asarray(self.tasks.job_submit, np.float64)
-            - np.asarray(self.tasks.job_ideal, np.float64)
+        """float64[J] JCT delay (Eq. 2) for completed jobs, nan otherwise
+        (``runtime.job_delays_from_state``, materialized)."""
+        delays, _ = runtime.job_delays_from_state(
+            self.state.task_finish, self.state.t, self.tasks
         )
+        return np.asarray(delays, np.float64)
 
     def to_run_metrics(self, include_tasks: bool = True) -> RunMetrics:
         """Materialize ``RunMetrics`` records so every event-backend consumer
@@ -349,6 +363,8 @@ def simulate_workload(
 ) -> SimxRun:
     """Run one (scheduler, workload) simx simulation to completion.
 
+    ``scheduler`` is any registered rule — the four paper schedulers or
+    the ``"oracle"`` global-knowledge lower bound (``runtime.RULES``).
     Mirrors ``sim.simulator.run_simulation`` semantics; ``until`` caps the
     simulated time span instead of running until all tasks finish.
     Scheduler-specific knobs carry the event backend's names and defaults
@@ -360,12 +376,9 @@ def simulate_workload(
     for the fault-timing contract.
     """
     name = scheduler.lower()
-    if name not in SCHEDULERS:
-        raise ValueError(
-            f"simx backend implements {SCHEDULERS}, not {scheduler!r}"
-        )
+    rule = runtime.get_rule(name)
     tasks = export_workload(workload)
-    if name == "megha":
+    if rule.needs_grid:
         num_workers = grid_workers(num_workers, num_gms, num_lms)
     cfg = SimxConfig(
         num_workers=num_workers,
@@ -393,7 +406,7 @@ def simulate_workload(
                 f"simulation has {num_workers} (megha shaves to the GM x LM "
                 "grid — build the schedule from grid_workers(num_workers))"
             )
-        if name == "megha" and faults.gm_down.shape != (num_gms,):
+        if rule.needs_grid and faults.gm_down.shape != (num_gms,):
             raise ValueError(
                 f"fault schedule covers {faults.gm_down.shape[0]} GMs, "
                 f"simulation has {num_gms}"
@@ -401,27 +414,17 @@ def simulate_workload(
         if is_empty(faults):
             faults = None  # the no-op schedule: build the plain program
     key = jax.random.PRNGKey(seed)
-    match_fn = simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret)
+    match_fn = runtime.default_match_fn(use_pallas=use_pallas, interpret=interpret)
     # the [W, R] head-of-queue pick wants a 1-row-block kernel tile (queue
     # rows are R <= 64 wide; the wide match's default would pad them 64x)
-    pick_fn = simx_megha.default_match_fn(
+    pick_fn = runtime.default_match_fn(
         use_pallas=use_pallas, interpret=interpret, block_rows=1
     )
-    if name == "megha":
-        orders = simx_megha.gm_orders(key, cfg)
-        step = simx_megha.make_megha_step(cfg, tasks, orders, match_fn, faults=faults)
-        state = init_megha_state(cfg, tasks.num_tasks)
-    elif name == "sparrow":
-        step = simx_sparrow.make_sparrow_step(cfg, tasks, key, pick_fn, faults=faults)
-        state = init_sparrow_state(cfg, tasks)
-    elif name == "eagle":
-        step = simx_eagle.make_eagle_step(
-            cfg, tasks, key, match_fn, pick_fn, faults=faults
-        )
-        state = init_eagle_state(cfg, tasks)
-    else:
-        step = simx_pigeon.make_pigeon_step(cfg, tasks, match_fn, faults=faults)
-        state = init_pigeon_state(cfg, tasks.num_tasks)
+    # any registered rule builds and runs through the same three calls
+    step = rule.build_step(
+        cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults
+    )
+    state = rule.init(cfg, tasks)
     cap = max_rounds if max_rounds is not None else estimate_rounds(cfg, tasks)
     if max_rounds is None and faults is not None:
         # outages park work until recovery: extend the horizon past the last

@@ -7,7 +7,11 @@ dense per-worker / per-GM crash and recovery times that every round's step
 function masks against, so fault studies jit, scan, and ``vmap`` over a
 whole severity grid exactly like a Fig. 2 load grid (``sweep.fig4_sweep``).
 
-Semantics shared by all four schedulers (megha, sparrow, eagle, pigeon):
+The crash transition itself runs as stage 1 of the shared round pipeline
+(``runtime.fault_stage`` inside ``runtime.compose_step``), so every
+registered rule — including ones added later — inherits it; rules only
+supply their FIFO-head rollback from the returned loss mask.  Semantics
+shared by every scheduler (megha, sparrow, eagle, pigeon, oracle):
 
   * a worker is **down** during ``[worker_down, worker_up)``.  At the crash
     round its in-flight task (if any) is *lost*: the task returns to the
@@ -95,7 +99,7 @@ def is_empty(fs: FaultSchedule) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# masked transitions shared by the four scheduler step functions
+# masked transitions shared by every rule's step function
 # ---------------------------------------------------------------------------
 
 
@@ -113,7 +117,8 @@ def apply_worker_faults(
     worker_task: jax.Array,
     num_tasks: int,
 ):
-    """The round-start crash transition shared by all four schedulers.
+    """The round-start crash transition shared by every rule (stage 1
+    of ``runtime.compose_step``).
 
     Workers whose crash time fell inside the round window just ended lose
     their in-flight task (re-pended) and read busy until their recovery

@@ -26,25 +26,24 @@ One round advances the whole datacenter by ``cfg.dt`` simulated seconds:
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
-from repro.kernels.match import match_ranks_batched
+from repro.simx import runtime as rt
 from repro.simx.faults import (
     FaultSchedule,
-    apply_worker_faults,
     gm_adoption,
     gm_down_mask,
     gm_recovered_now,
 )
+from repro.simx.runtime import (  # noqa: F401 — canonical home is runtime;
+    MatchFn,                      # re-exported here for the existing call
+    default_match_fn,             # sites (tests, benchmarks, engine)
+)
 from repro.simx.state import MeghaState, SimxConfig, TaskArrays, init_megha_state
-
-MatchFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 
 def gm_orders(key: jax.Array, cfg: SimxConfig) -> jax.Array:
@@ -68,23 +67,6 @@ def gm_orders(key: jax.Array, cfg: SimxConfig) -> jax.Array:
             )
         )
     return jnp.stack(rows)
-
-
-def default_match_fn(
-    use_pallas: bool = False, interpret: bool = True, block_rows: int = 64
-) -> MatchFn:
-    """The GM match primitive: the batched Pallas kernel on TPU, the jnp
-    reference on CPU (Pallas interpret mode is orders of magnitude slower
-    than XLA inside a scanned hot loop).
-
-    ``block_rows`` sizes the kernel's VMEM tile; the kernel pads each row
-    to ``block_rows * 128`` lanes, so wide-and-few matches (megha's
-    [G, W] GM rows) want the default while narrow-and-many ones (the
-    sparrow/eagle [W, R] head-of-queue pick, R ≲ 64) should pass
-    ``block_rows=1``."""
-    if use_pallas:
-        return partial(match_ranks_batched, interpret=interpret, block_rows=block_rows)
-    return ref.match_ranks_batched_ref
 
 
 def make_megha_step(
@@ -164,32 +146,17 @@ def make_megha_step(
         task_pos_pad = jnp.asarray(task_pos_np)
     # task submit times in the padded compact layout (sentinel -> inf)
     submit_c = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])[gm_tasks]
-    win = jnp.arange(C, dtype=jnp.int32)[None, :]      # int32[1,C]
     dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
-
-    def slice_rows(mat, starts, width):
-        return jax.vmap(
-            lambda row, s: jax.lax.dynamic_slice(row, (s,), (width,))
-        )(mat, starts)
-
-    def fifo_of(queued_w):
-        """int32[G,C]: window position of each GM's r-th queued task (C if
-        none) — sorting queued positions ahead of the C sentinels preserves
-        task-index (== FIFO) order."""
-        return jnp.sort(
-            jnp.where(queued_w, jnp.broadcast_to(win, queued_w.shape), C), axis=1
-        )
 
     def launch_updates(t, launch_w, task_w, gm_w, task_finish, worker_finish,
                        worker_task, worker_gm, worker_borrowed):
-        """Apply one phase's launches ([W]-space masks) to the task/worker
-        state.  start = round time + client->GM + GM->LM + LM->worker hops."""
-        start = t + 3 * cfg.hop
-        lt = jnp.where(launch_w, task_w, T)
-        fin = start + dur_pad[jnp.minimum(task_w, T)]
-        task_finish = task_finish.at[lt].set(fin, mode="drop")
-        worker_finish = jnp.where(launch_w, fin, worker_finish)
-        worker_task = jnp.where(launch_w, task_w, worker_task)
+        """Apply one phase's launches ([W]-space masks): the shared launch
+        bookkeeping plus megha's owner/borrow tracking.  start = round
+        time + client->GM + GM->LM + LM->worker hops."""
+        task_finish, worker_finish, worker_task = rt.apply_launch(
+            launch_w, task_w, t + 3 * cfg.hop, dur_pad,
+            task_finish, worker_finish, worker_task, T,
+        )
         worker_gm = jnp.where(launch_w, gm_w, worker_gm)
         worker_borrowed = jnp.where(launch_w, part_gm != gm_w, worker_borrowed)
         return task_finish, worker_finish, worker_task, worker_gm, worker_borrowed
@@ -205,16 +172,10 @@ def make_megha_step(
         refresh = jnp.repeat(invalid_gl, wpl, axis=1)             # bool[G,W]
         return jnp.where(refresh, truth[None, :], view)
 
-    def step(s: MeghaState) -> MeghaState:
-        t = s.t
-        # -- 0. fault transitions (round start) -----------------------------
-        task_finish0, worker_finish0 = s.task_finish, s.worker_finish
-        head0, lost = s.head, s.lost
+    def dispatch(s, t, task_finish0, worker_finish0, truth, comp, lost_w):
+        # -- 0. crash-loss rollback (fault stage ran in the runtime) --------
+        head0 = s.head
         if faults is not None:
-            task_finish0, worker_finish0, lost_w, n_lost = apply_worker_faults(
-                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
-            )
-            lost = lost + n_lost
             # re-enqueue lost tasks: roll each GM's FIFO head back to the
             # earliest lost position (re-examined over the coming rounds)
             lt0 = jnp.where(lost_w, s.worker_task, T)
@@ -222,11 +183,7 @@ def make_megha_step(
                 task_pos_pad[lt0], mode="drop"
             )
 
-        # -- 1. completions -------------------------------------------------
-        # a worker completes this round iff its finish time fell in the round
-        # window just ended; task_finish was already recorded at launch
-        truth = worker_finish0 <= t                    # bool[W] ground truth
-        comp = truth & (worker_finish0 > t - cfg.dt)
+        # -- 1. completions (truth/comp = the runtime's completion stage) ---
         regain = ((s.worker_gm[None, :] == g_col) & (comp & ~s.worker_borrowed))
         view = s.view | regain
         messages = s.messages + jnp.sum(comp, dtype=jnp.int32)  # LM -> GM
@@ -253,15 +210,15 @@ def make_megha_step(
             messages = messages + L * jnp.sum(rec, dtype=jnp.int32)
 
         # -- 3. internal match (FIFO windows, [G, W/G] arrays) --------------
-        wtask = slice_rows(gm_tasks, head0, C)                    # int32[G,C]
-        wsubmit = slice_rows(submit_c, head0, C)                  # float32[G,C]
-        fpad = jnp.concatenate([task_finish0, jnp.float32([-jnp.inf])])
-        launched_w = ~jnp.isinf(fpad[wtask]) | (wtask >= T)       # bool[G,C]
+        wtask = rt.slice_rows(gm_tasks, head0, C)                 # int32[G,C]
+        wsubmit = rt.slice_rows(submit_c, head0, C)               # float32[G,C]
+        fpad = rt.finish_pad(task_finish0)
+        launched_w = rt.window_launched(fpad, wtask, T)           # bool[G,C]
         queued_w = ~launched_w & (wsubmit <= t)                   # bool[G,C]
         if faults is not None:
             queued_w = queued_w & row_active[:, None]  # frozen when no GM live
         nq = jnp.sum(queued_w, axis=1, dtype=jnp.int32)           # int32[G]
-        fifo = fifo_of(queued_w)                                  # int32[G,C]
+        fifo = rt.sorted_fifo(queued_w, C)                        # int32[G,C]
         view_eff = view if adopt is None else view[adopt]
         avail_int = view_eff[g_col, int_ord]                      # bool[G,wi]
         ranks_i = match_fn(avail_int, nq)                         # int32[G,wi]
@@ -305,13 +262,13 @@ def make_megha_step(
         def borrow(args):
             (view, truth, task_finish, worker_finish, worker_task, worker_gm,
              worker_borrowed, inconsistencies, repartitions, messages) = args
-            fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
-            launched2 = ~jnp.isinf(fpad2[wtask]) | (wtask >= T)
+            fpad2 = rt.finish_pad(task_finish)
+            launched2 = rt.window_launched(fpad2, wtask, T)
             queued2 = ~launched2 & (wsubmit <= t)
             if faults is not None:
                 queued2 = queued2 & row_active[:, None]
             nq2 = jnp.sum(queued2, axis=1, dtype=jnp.int32)
-            fifo2 = fifo_of(queued2)
+            fifo2 = rt.sorted_fifo(queued2, C)
             view_b = view if adopt is None else view[adopt]
             avail_ord = jnp.take_along_axis(view_b, orders, axis=1)  # bool[G,W]
             ranks = match_fn(avail_ord, nq2)                       # int32[G,W]
@@ -369,16 +326,11 @@ def make_megha_step(
         )
 
         # -- 5. advance each GM's FIFO head past its launched prefix --------
-        fpad3 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
-        launched3 = ~jnp.isinf(fpad3[wtask]) | (wtask >= T)        # bool[G,C]
-        lead = jnp.sum(
-            jnp.cumprod(launched3.astype(jnp.int32), axis=1), axis=1
-        )                                                          # int32[G]
-        head = jnp.minimum(head0 + lead, tg)
+        fpad3 = rt.finish_pad(task_finish)
+        launched3 = rt.window_launched(fpad3, wtask, T)            # bool[G,C]
+        head = jnp.minimum(head0 + rt.launched_lead(launched3), tg)
 
-        return s.replace(
-            t=t + cfg.dt,
-            rnd=s.rnd + 1,
+        return dict(
             task_finish=task_finish,
             head=head,
             worker_finish=worker_finish,
@@ -389,10 +341,9 @@ def make_megha_step(
             inconsistencies=inconsistencies,
             repartitions=repartitions,
             messages=messages,
-            lost=lost,
         )
 
-    return step
+    return rt.compose_step(cfg, tasks, dispatch, faults)
 
 
 def simulate_fixed(
@@ -405,10 +356,31 @@ def simulate_fixed(
 ) -> MeghaState:
     """Run exactly ``num_rounds`` rounds from a fresh DC — a pure function of
     ``seed`` (and the ``faults`` leaves), so an entire sweep grid runs as
-    ``jax.vmap(simulate_fixed, ...)`` in one compiled program."""
-    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    orders = gm_orders(key, cfg)
-    step = make_megha_step(cfg, tasks, orders, match_fn, faults=faults)
-    state = init_megha_state(cfg, tasks.num_tasks)
-    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
-    return state
+    ``jax.vmap(simulate_fixed, ...)`` in one compiled program.  Thin
+    wrapper over the registry-driven ``runtime.simulate_fixed``."""
+    return rt.simulate_fixed(
+        "megha", cfg, tasks, seed, num_rounds, match_fn=match_fn, faults=faults
+    )
+
+
+def _build_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    key: jax.Array,
+    *,
+    match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
+) -> Callable[[MeghaState], MeghaState]:
+    del pick_fn  # megha has no reservation queues
+    return make_megha_step(cfg, tasks, gm_orders(key, cfg), match_fn, faults=faults)
+
+
+RULE = rt.register_rule(
+    rt.Rule(
+        name="megha",
+        init=lambda cfg, tasks: init_megha_state(cfg, tasks.num_tasks),
+        build_step=_build_step,
+        needs_grid=True,
+    )
+)

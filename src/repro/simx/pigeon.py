@@ -37,8 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.simx.faults import FaultSchedule, apply_worker_faults
-from repro.simx.megha import MatchFn, default_match_fn
+from repro.simx import runtime as rt
+from repro.simx.faults import FaultSchedule
+from repro.simx.runtime import MatchFn, default_match_fn
 from repro.simx.state import PigeonState, SimxConfig, TaskArrays, init_pigeon_state
 
 
@@ -123,7 +124,6 @@ def make_pigeon_step(
     len_l = low_fifo.shape[1] - C
     submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
     dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
-    wf_pad_inf = jnp.float32([jnp.inf])
     if faults is not None:
         # task -> (group, FIFO position, class) for crash-loss head rollback;
         # the T pad routes to the out-of-bounds group NG (scatter-dropped)
@@ -132,18 +132,12 @@ def make_pigeon_step(
         high_pad = jnp.concatenate(
             [jnp.asarray(high_task), jnp.zeros(1, jnp.bool_)]
         )
-        c_row = jnp.arange(C, dtype=jnp.int32)[None, :]
-
-    def slice_rows(mat, starts, width):
-        return jax.vmap(
-            lambda row, st: jax.lax.dynamic_slice(row, (st,), (width,))
-        )(mat, starts)
 
     def window(fifo, heads, t):
         """Window task ids + queued counts.  Launches are strictly FIFO and
         the head fully advances every round, so the window never contains a
         launched task and 'queued' is just the submitted prefix."""
-        wtask = slice_rows(fifo, heads, C)                      # int32[NG,C]
+        wtask = rt.slice_rows(fifo, heads, C)                   # int32[NG,C]
         wsub = jnp.where(wtask >= T, jnp.inf, submit_pad[jnp.minimum(wtask, T)])
         return wtask, jnp.sum(wsub <= t, axis=1, dtype=jnp.int32)
 
@@ -151,26 +145,18 @@ def make_pigeon_step(
         """Fault-mode window: a rolled-back head re-examines launched tasks,
         so 'queued' needs the explicit unlaunched mask and rank -> task
         goes through sorted queued positions (megha's FIFO recovery)."""
-        wtask = slice_rows(fifo, heads, C)                      # int32[NG,C]
+        wtask = rt.slice_rows(fifo, heads, C)                   # int32[NG,C]
         wsub = jnp.where(wtask >= T, jnp.inf, submit_pad[jnp.minimum(wtask, T)])
-        fpad = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
+        fpad = rt.finish_pad(task_finish)
         launched = ~jnp.isinf(fpad[wtask])                      # pad: False
         queued = ~launched & (wsub <= t)
-        fifo_pos = jnp.sort(
-            jnp.where(queued, jnp.broadcast_to(c_row, queued.shape), C), axis=1
-        )
-        return wtask, jnp.sum(queued, axis=1, dtype=jnp.int32), fifo_pos
+        return wtask, jnp.sum(queued, axis=1, dtype=jnp.int32), rt.sorted_fifo(queued, C)
 
-    def step(s: PigeonState) -> PigeonState:
-        t = s.t
-        # -- 0. fault transitions (round start) -----------------------------
-        task_finish0, worker_finish0 = s.task_finish, s.worker_finish
-        high_head0, low_head0, lost = s.high_head, s.low_head, s.lost
+    def dispatch(s, t, task_finish0, worker_finish0, free_w, comp, lost_w):
+        # -- 0. crash-loss rollback (fault stage ran in the runtime) --------
+        del comp  # completions stay implicit in the group capacity gather
+        high_head0, low_head0 = s.high_head, s.low_head
         if faults is not None:
-            task_finish0, worker_finish0, lost_w, n_lost = apply_worker_faults(
-                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
-            )
-            lost = lost + n_lost
             # re-enqueue lost tasks: roll the owning group's class FIFO back
             lt0 = jnp.where(lost_w, s.worker_task, T)
             g0, p0, hi0 = grp_pad[lt0], task_pos_pad[lt0], high_pad[lt0]
@@ -181,10 +167,10 @@ def make_pigeon_step(
                 p0, mode="drop"
             )
 
-        # -- 1. free capacity per group (completions implicit; a crashed
-        #       worker holds its recovery time, shrinking group capacity) ---
-        wf_g = jnp.concatenate([worker_finish0, wf_pad_inf])[wg]   # [NG,S]
-        free = wf_g <= t
+        # -- 1. free capacity per group (the runtime's completion stage,
+        #       gathered into the [NG, S] group grid; a crashed worker holds
+        #       its recovery time, shrinking group capacity; pads read busy)
+        free = jnp.concatenate([free_w, jnp.zeros(1, jnp.bool_)])[wg]  # [NG,S]
         free_u = free & ~reserved
         free_r = free & reserved
         nfu = jnp.sum(free_u, axis=1, dtype=jnp.int32)             # int32[NG]
@@ -287,22 +273,17 @@ def make_pigeon_step(
             low_head = jnp.minimum(low_head0 + n_low, len_l)
         else:
             # rolled-back windows have holes: advance past the launched
-            # prefix instead (equals the counts whenever there are none)
-            fpad2 = jnp.concatenate([task_finish, jnp.float32([-jnp.inf])])
-            lead_h = jnp.sum(
-                jnp.cumprod((~jnp.isinf(fpad2[wh])).astype(jnp.int32), axis=1),
-                axis=1,
-            )
-            lead_l = jnp.sum(
-                jnp.cumprod((~jnp.isinf(fpad2[wl])).astype(jnp.int32), axis=1),
-                axis=1,
-            )
+            # prefix instead (equals the counts whenever there are none).
+            # Pads read NOT launched here (unlike ``rt.window_launched``):
+            # the head stops at the real tail instead of running through
+            # the pad slots.
+            fpad2 = rt.finish_pad(task_finish)
+            lead_h = rt.launched_lead(~jnp.isinf(fpad2[wh]))
+            lead_l = rt.launched_lead(~jnp.isinf(fpad2[wl]))
             high_head = jnp.minimum(high_head0 + lead_h, len_h)
             low_head = jnp.minimum(low_head0 + lead_l, len_l)
 
-        return s.replace(
-            t=t + cfg.dt,
-            rnd=s.rnd + 1,
+        return dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
@@ -310,10 +291,9 @@ def make_pigeon_step(
             low_head=low_head,
             since_low=since_low,
             messages=messages,
-            lost=lost,
         )
 
-    return step
+    return rt.compose_step(cfg, tasks, dispatch, faults)
 
 
 def simulate_fixed(
@@ -327,8 +307,28 @@ def simulate_fixed(
     """Run exactly ``num_rounds`` rounds from an idle DC.  Pigeon's
     transition is deterministic given the trace; ``seed`` is accepted for
     signature parity with the other schedulers (vmap-able all the same)."""
-    del seed  # no randomized state: distribution is static round-robin
-    step = make_pigeon_step(cfg, tasks, match_fn, faults=faults)
-    state = init_pigeon_state(cfg, tasks.num_tasks)
-    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
-    return state
+    return rt.simulate_fixed(
+        "pigeon", cfg, tasks, seed, num_rounds, match_fn=match_fn, faults=faults
+    )
+
+
+def _build_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    key: jax.Array,
+    *,
+    match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
+) -> Callable[[PigeonState], PigeonState]:
+    del key, pick_fn  # static round-robin distribution, no queues
+    return make_pigeon_step(cfg, tasks, match_fn, faults=faults)
+
+
+RULE = rt.register_rule(
+    rt.Rule(
+        name="pigeon",
+        init=lambda cfg, tasks: init_pigeon_state(cfg, tasks.num_tasks),
+        build_step=_build_step,
+    )
+)

@@ -45,13 +45,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.simx import runtime as rt
 from repro.simx.faults import (
     FaultSchedule,
-    apply_worker_faults,
     jobs_with_reservation,
     worker_dead,
 )
-from repro.simx.megha import MatchFn, default_match_fn
+from repro.simx.runtime import MatchFn, default_match_fn
 from repro.simx.state import (
     SimxConfig,
     SparrowState,
@@ -339,22 +339,19 @@ def make_sparrow_step(
     edge_job, edge_worker, edge_end, P, C = build_probe_edges(key, cfg, tasks)
     job_submit_pad = jnp.concatenate([tasks.job_submit, jnp.float32([jnp.inf])])
     j_idx = jnp.arange(J, dtype=jnp.int32)
+    dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
     # tasks are exported contiguously per job: cumulative task count before
     # each job gives the within-job pending rank via one global cumsum
     job_start = jnp.concatenate(
         [jnp.zeros(1, jnp.int32), jnp.cumsum(tasks.job_ntasks, dtype=jnp.int32)[:-1]]
     )
 
-    def step(s: SparrowState) -> SparrowState:
-        t = s.t
-        # completions are implicit: a worker is idle iff worker_finish <= t,
-        # and task_finish was recorded at launch
-        task_finish0, worker_finish0, lost = s.task_finish, s.worker_finish, s.lost
-        if faults is not None:
-            task_finish0, worker_finish0, _, n_lost = apply_worker_faults(
-                faults, t, cfg.dt, task_finish0, worker_finish0, s.worker_task, T
-            )
-            lost = lost + n_lost
+    def dispatch(s, t, task_finish0, worker_finish0, idle, comp, lost_w):
+        # completions are implicit: a worker is idle iff worker_finish <= t
+        # (the runtime's completion stage), and task_finish was recorded at
+        # launch; a crash-lost task simply re-pends — late binding has no
+        # head pointer to roll back, so ``lost_w`` goes unused
+        del comp, lost_w
 
         # -- 0. recycle completed jobs' slots, compact the queues -----------
         resq, fill = compact_queues(s.resq, task_finish0, tasks.job, t, J)
@@ -393,22 +390,17 @@ def make_sparrow_step(
         )
         rescue = jnp.min(jnp.where(orphan, j_idx, J))
         job_pick = jnp.minimum(job_pick, rescue)
-        idle = worker_finish0 <= t
         launch, task_pick = late_bind(
             jnp.where(idle, job_pick, J), pend_task, tasks.job, job_start
         )
-        lt = jnp.where(launch, task_pick, T)
         # client->scheduler hop + worker->scheduler get-task RPC round trip
-        start = t + 3 * cfg.hop
-        dur = tasks.duration[jnp.clip(task_pick, 0, T - 1)]
-        task_finish = task_finish0.at[lt].set(start + dur, mode="drop")
-        worker_finish = jnp.where(launch, start + dur, worker_finish0)
-        worker_task = jnp.where(launch, task_pick, s.worker_task)
+        task_finish, worker_finish, worker_task = rt.apply_launch(
+            launch, task_pick, t + 3 * cfg.hop, dur_pad,
+            task_finish0, worker_finish0, s.worker_task, T,
+        )
         messages = messages + 2 * jnp.sum(launch, dtype=jnp.int32)  # RPC + reply
 
-        return s.replace(
-            t=t + cfg.dt,
-            rnd=s.rnd + 1,
+        return dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
@@ -418,10 +410,9 @@ def make_sparrow_step(
             probe_lag=lag,
             probes=probes_ctr,
             messages=messages,
-            lost=lost,
         )
 
-    return step
+    return rt.compose_step(cfg, tasks, dispatch, faults)
 
 
 def simulate_fixed(
@@ -432,9 +423,40 @@ def simulate_fixed(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
 ) -> SparrowState:
-    """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in seed)."""
-    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
-    step = make_sparrow_step(cfg, tasks, key, match_fn, faults=faults)
-    state = init_sparrow_state(cfg, tasks)
-    state, _ = jax.lax.scan(lambda s, _: (step(s), None), state, None, length=num_rounds)
-    return state
+    """Run exactly ``num_rounds`` rounds from an idle DC (vmap-able in
+    seed).  ``match_fn`` IS the narrow head-of-queue pick (sparrow has no
+    wide match); the registry routes it as ``pick_fn``."""
+    return rt.simulate_fixed(
+        "sparrow", cfg, tasks, seed, num_rounds, pick_fn=match_fn, faults=faults
+    )
+
+
+def _build_step(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    key: jax.Array,
+    *,
+    match_fn: MatchFn | None = None,
+    pick_fn: MatchFn | None = None,
+    faults: FaultSchedule | None = None,
+) -> Callable[[SparrowState], SparrowState]:
+    # sparrow's only rank-and-select is the [W, R] head-of-queue pick.
+    # When both are supplied (the sweep drivers), pick_fn wins — the wide
+    # match_fn's kernel tile would pad every R ≲ 64 queue row to
+    # block_rows * 128 lanes.  A bare match_fn (the retired per-module
+    # SIMULATE_FIXED signature, where match_fn IS the pick) still routes
+    # to the pick rather than being silently dropped.
+    return make_sparrow_step(
+        cfg, tasks, key, pick_fn if pick_fn is not None else match_fn,
+        faults=faults,
+    )
+
+
+RULE = rt.register_rule(
+    rt.Rule(
+        name="sparrow",
+        init=lambda cfg, tasks: init_sparrow_state(cfg, tasks),
+        build_step=_build_step,
+        has_queues=True,
+    )
+)

@@ -7,13 +7,18 @@ whole simulation jits, scans, and vmaps:
                       (tasks sorted by job submission time, so task index
                       order == FIFO arrival order).
   * ``SimxConfig``  — static (python-level) simulation parameters shared by
-                      all four transition rules (megha, sparrow, eagle,
-                      pigeon), incl. the eagle/pigeon-specific knobs.
-  * ``MeghaState`` / ``SparrowState`` / ``EagleState`` / ``PigeonState`` —
-    the scan carries: dataclass-of-arrays pytrees holding ground truth, stale
-    views, per-worker run state, per-task lifecycle state, and the metric
-    accumulators mirroring ``RunMetrics`` (inconsistencies, repartitions,
-    messages, probes).
+                      every transition rule (megha, sparrow, eagle,
+                      pigeon, oracle), incl. the eagle/pigeon-specific knobs.
+  * ``CoreState``   — the scan-carry base every rule shares: simulated
+                      time, per-task lifecycle state, per-worker run
+                      state, and the metric accumulators mirroring
+                      ``RunMetrics`` (inconsistencies, repartitions,
+                      messages, probes, crash losses).  ``QueueState``
+                      extends it with the sparrow/eagle reservation-queue
+                      fields.
+  * ``MeghaState`` / ``SparrowState`` / ``EagleState`` / ``PigeonState`` /
+    ``OracleState`` — the per-rule carries: ``CoreState`` plus each
+    scheduler's private fields (stale views, FIFO heads, WFQ phase, ...).
 
 Task lifecycle is encoded implicitly by ONE float array: both backends
 record ``task_finish = start + duration`` at LAUNCH, since the completion
@@ -252,26 +257,50 @@ def _common_fields(cfg: SimxConfig, num_tasks: int) -> dict:
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
-class MeghaState:
-    """Scan carry for the megha transition rule."""
+class CoreState:
+    """The scan-carry fields every transition rule shares — what the
+    round-stage runtime (``repro.simx.runtime``) reads and advances.
+    Rules subclass this with their private fields; ``_common_fields``
+    initializes exactly these."""
 
     t: jax.Array               # float32[] — simulated time at round start
     rnd: jax.Array             # int32[]
     task_finish: jax.Array     # float32[T] — inf until launched (= start+dur)
-    head: jax.Array            # int32[G] — launched prefix of each GM's FIFO
     worker_finish: jax.Array   # float32[W] — free iff <= t
     worker_task: jax.Array     # int32[W] — last task launched here (T = none)
-    worker_gm: jax.Array       # int32[W] — GM that scheduled the last task
-    worker_borrowed: jax.Array  # bool[W] — last task ran on a borrowed worker
-    view: jax.Array            # bool[G, W] — per-GM stale availability view
     inconsistencies: jax.Array  # int32[]
     repartitions: jax.Array    # int32[]
     messages: jax.Array        # int32[]
     probes: jax.Array          # int32[]
     lost: jax.Array            # int32[] — tasks lost to worker crashes
 
-    def replace(self, **kw) -> "MeghaState":
+    def replace(self, **kw):
         return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class QueueState(CoreState):
+    """``CoreState`` plus the capped per-worker reservation-queue fields
+    shared by the sparrow and eagle rules (see ``SparrowState``)."""
+
+    resq: jax.Array           # int32[W, R] — reservation queues (J = empty),
+                              # compacted each round, ascending job id
+    probe_head: jax.Array     # int32[] — inserted prefix of the edge list
+    res_overflow: jax.Array   # int32[] — probes dropped on full queues
+    probe_lag: jax.Array      # int32[] — rounds the insertion window
+                              # saturated (arrival burst outran it)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MeghaState(CoreState):
+    """Scan carry for the megha transition rule."""
+
+    head: jax.Array            # int32[G] — launched prefix of each GM's FIFO
+    worker_gm: jax.Array       # int32[W] — GM that scheduled the last task
+    worker_borrowed: jax.Array  # bool[W] — last task ran on a borrowed worker
+    view: jax.Array            # bool[G, W] — per-GM stale availability view
 
 
 def init_megha_state(cfg: SimxConfig, num_tasks: int) -> MeghaState:
@@ -287,33 +316,14 @@ def init_megha_state(cfg: SimxConfig, num_tasks: int) -> MeghaState:
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
-class SparrowState:
+class SparrowState(QueueState):
     """Scan carry for the sparrow transition rule.
 
     Probe/reservation state is the capped per-worker queue ``resq`` —
     ``int32[W, R]`` of job ids (J = empty slot), O(W) regardless of trace
-    length — plus the insertion head into the static probe edge list.
+    length — plus the insertion head into the static probe edge list
+    (all inherited from ``QueueState``).
     """
-
-    t: jax.Array
-    rnd: jax.Array
-    task_finish: jax.Array
-    worker_finish: jax.Array
-    worker_task: jax.Array    # int32[W] — last task launched here (T = none)
-    resq: jax.Array           # int32[W, R] — reservation queues (J = empty),
-                              # compacted each round, ascending job id
-    probe_head: jax.Array     # int32[] — inserted prefix of the edge list
-    res_overflow: jax.Array   # int32[] — probes dropped on full queues
-    probe_lag: jax.Array      # int32[] — rounds the insertion window
-                              # saturated (arrival burst outran it)
-    inconsistencies: jax.Array
-    repartitions: jax.Array
-    messages: jax.Array
-    probes: jax.Array
-    lost: jax.Array           # int32[] — tasks lost to worker crashes
-
-    def replace(self, **kw) -> "SparrowState":
-        return dataclasses.replace(self, **kw)
 
 
 def init_sparrow_state(cfg: SimxConfig, tasks: TaskArrays) -> SparrowState:
@@ -331,30 +341,14 @@ def init_sparrow_state(cfg: SimxConfig, tasks: TaskArrays) -> SparrowState:
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
-class EagleState:
-    """Scan carry for the eagle transition rule."""
+class EagleState(QueueState):
+    """Scan carry for the eagle transition rule: the sparrow queue fields
+    (``resq`` holds the short-job reservations, post-SSS re-routed) plus
+    the central long-FIFO head.  ``worker_task`` additionally drives the
+    SSS long-running test: a worker runs long iff busy and its task's job
+    is long."""
 
-    t: jax.Array
-    rnd: jax.Array
-    task_finish: jax.Array
-    worker_finish: jax.Array
-    worker_task: jax.Array   # int32[W] — last task launched here (T = none);
-                             # running long iff busy & its task's job is long
-    resq: jax.Array          # int32[W, R] — short-job reservation queues
-                             # (J = empty; post-SSS re-routed targets)
-    probe_head: jax.Array    # int32[] — inserted prefix of the edge list
-    res_overflow: jax.Array  # int32[] — probes dropped on full queues
-    probe_lag: jax.Array     # int32[] — rounds the insertion window
-                             # saturated (arrival burst outran it)
     long_head: jax.Array     # int32[] — launched prefix of the central FIFO
-    inconsistencies: jax.Array
-    repartitions: jax.Array
-    messages: jax.Array
-    probes: jax.Array
-    lost: jax.Array          # int32[] — tasks lost to worker crashes
-
-    def replace(self, **kw) -> "EagleState":
-        return dataclasses.replace(self, **kw)
 
 
 def init_eagle_state(cfg: SimxConfig, tasks: TaskArrays) -> EagleState:
@@ -373,25 +367,12 @@ def init_eagle_state(cfg: SimxConfig, tasks: TaskArrays) -> EagleState:
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
-class PigeonState:
+class PigeonState(CoreState):
     """Scan carry for the pigeon transition rule."""
 
-    t: jax.Array
-    rnd: jax.Array
-    task_finish: jax.Array
-    worker_finish: jax.Array
-    worker_task: jax.Array   # int32[W] — last task launched here (T = none)
     high_head: jax.Array     # int32[NG] — launched prefix of each group's
     low_head: jax.Array      # int32[NG]   high/low-priority FIFO
     since_low: jax.Array     # int32[NG] — WFQ: high tasks since the last low
-    inconsistencies: jax.Array
-    repartitions: jax.Array
-    messages: jax.Array
-    probes: jax.Array
-    lost: jax.Array          # int32[] — tasks lost to worker crashes
-
-    def replace(self, **kw) -> "PigeonState":
-        return dataclasses.replace(self, **kw)
 
 
 def init_pigeon_state(cfg: SimxConfig, num_tasks: int) -> PigeonState:
@@ -400,5 +381,21 @@ def init_pigeon_state(cfg: SimxConfig, num_tasks: int) -> PigeonState:
         high_head=jnp.zeros(ng, jnp.int32),
         low_head=jnp.zeros(ng, jnp.int32),
         since_low=jnp.zeros(ng, jnp.int32),
+        **_common_fields(cfg, num_tasks),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class OracleState(CoreState):
+    """Scan carry for the omniscient-oracle rule: one global FIFO head —
+    perfect knowledge needs no views, queues, or per-group state."""
+
+    head: jax.Array          # int32[] — launched prefix of the global FIFO
+
+
+def init_oracle_state(cfg: SimxConfig, num_tasks: int) -> OracleState:
+    return OracleState(
+        head=jnp.int32(0),
         **_common_fields(cfg, num_tasks),
     )

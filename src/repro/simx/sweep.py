@@ -40,6 +40,8 @@ from __future__ import annotations
 import dataclasses
 import logging
 import math
+from collections.abc import Mapping
+from functools import partial
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -47,38 +49,53 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.megha import grid_workers
-from repro.simx import eagle as simx_eagle
-from repro.simx import megha as simx_megha
-from repro.simx import pigeon as simx_pigeon
-from repro.simx import sparrow as simx_sparrow
+from repro.simx import engine  # noqa: F401 — registers the rule modules
+from repro.simx import runtime
 from repro.simx.faults import FaultSchedule, fault_grid_schedule
-from repro.simx.megha import MatchFn
+from repro.simx.runtime import MatchFn, default_match_fn
 from repro.simx.state import SimxConfig, TaskArrays, export_workload
 from repro.workload.synth import synthetic_trace
 
 log = logging.getLogger(__name__)
 
+
+class _SimulateFixedView(Mapping):
+    """Registry-backed view replacing the retired hand-maintained
+    ``{scheduler: simulate_fixed}`` dict: ``SIMULATE_FIXED[name]`` is
+    ``runtime.simulate_fixed`` bound to the named rule, so registering a
+    rule is all it takes to appear here (and in every sweep driver)."""
+
+    def __getitem__(self, name: str) -> Callable:
+        # KeyError (not get_rule's ValueError) keeps the Mapping protocol
+        # honest: `name in SIMULATE_FIXED` / `.get(name)` work like the
+        # plain dict this replaced
+        if name.lower() not in runtime.RULES:
+            raise KeyError(name)
+        return partial(runtime.simulate_fixed, name.lower())
+
+    def __iter__(self):
+        return iter(runtime.RULES)
+
+    def __len__(self) -> int:
+        return len(runtime.RULES)
+
+
 #: scheduler name -> round-synchronous simulate_fixed(cfg, tasks, seed, R)
-SIMULATE_FIXED: dict[str, Callable] = {
-    "megha": simx_megha.simulate_fixed,
-    "sparrow": simx_sparrow.simulate_fixed,
-    "eagle": simx_eagle.simulate_fixed,
-    "pigeon": simx_pigeon.simulate_fixed,
-}
+SIMULATE_FIXED: Mapping[str, Callable] = _SimulateFixedView()
 
 
 def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
     """Reduce one finished state to the Fig. 2 / Fig. 4 observables, inside
-    jit: p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs),
-    completion counts, the crash-loss counter, and the reservation-queue
-    health counters (0 for megha/pigeon, which carry no queues) — a
-    nonzero ``res_overflow`` or ``probe_lag`` flags a point whose delays
-    are distorted by a too-small ``reserve_cap`` / ``probe_window``."""
+    jit: p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs, via the
+    runtime's shared job-delay reduction), completion counts, the
+    crash-loss counter, and the reservation-queue health counters (0 for
+    rules that carry no queues) — a nonzero ``res_overflow`` or
+    ``probe_lag`` flags a point whose delays are distorted by a too-small
+    ``reserve_cap`` / ``probe_window``."""
     done = state.task_finish <= state.t
-    fin = jnp.where(done, state.task_finish, jnp.inf)
-    job_finish = jnp.full(tasks.num_jobs, -jnp.inf).at[tasks.job].max(fin)
-    delays = job_finish - tasks.job_submit - tasks.job_ideal
-    delays = jnp.where(jnp.isfinite(job_finish), delays, jnp.nan)
+    delays, job_finish = runtime.job_delays_from_state(
+        state.task_finish, state.t, tasks
+    )
     return {
         "p50": jnp.nanpercentile(delays, 50),
         "p95": jnp.nanpercentile(delays, 95),
@@ -200,23 +217,6 @@ def make_load_grid(
     return template, jnp.stack(submit), jnp.stack(job_submit)
 
 
-def _sim_kwargs(name: str, match_fn, pick_fn) -> dict:
-    """Route the rank-and-select implementations to the right call sites:
-    ``match_fn`` is the wide match (megha's GM rows, eagle's central long
-    match, pigeon's group pick); ``pick_fn`` is the narrow [W, R]
-    head-of-queue pick of the sparrow/eagle reservation queues, which on
-    TPU wants ``default_match_fn(..., block_rows=1)`` (sparrow has no wide
-    match, so its ``match_fn`` argument IS the pick).  With ``pick_fn``
-    omitted, BOTH queue schedulers fall back to the jnp reference — never
-    to the wide ``match_fn``, whose kernel tile would pad every R ≲ 64
-    queue row to ``block_rows * 128`` lanes."""
-    if name == "sparrow":
-        return {"match_fn": pick_fn}
-    if name == "eagle":
-        return {"match_fn": match_fn, "pick_fn": pick_fn}
-    return {"match_fn": match_fn}
-
-
 def sweep_grid(
     scheduler: str,
     cfg: SimxConfig,
@@ -232,17 +232,21 @@ def sweep_grid(
 
     ``match_fn`` / ``pick_fn`` select the rank-and-select implementations
     (wide match vs. the narrow reservation-queue head pick; see
-    ``megha.default_match_fn`` for the Pallas-vs-jnp choice).  Returns
+    ``runtime.default_match_fn`` for the Pallas-vs-jnp choice) — each
+    registered rule consumes the one(s) it needs.  Returns
     ``point_summary`` fields stacked to ``[L, S]`` arrays plus the total
     simulated task count (for tasks/sec accounting).
     """
     name = scheduler.lower()
-    sim = SIMULATE_FIXED[name]
-    sim_kw = _sim_kwargs(name, match_fn, pick_fn)
+    runtime.get_rule(name)  # fail fast on unknown schedulers
 
     def point(sub, jsub, seed):
         tk = dataclasses.replace(tasks, submit=sub, job_submit=jsub)
-        return point_summary(sim(cfg, tk, seed, num_rounds, **sim_kw), tk)
+        state = runtime.simulate_fixed(
+            name, cfg, tk, seed, num_rounds,
+            match_fn=match_fn, pick_fn=pick_fn,
+        )
+        return point_summary(state, tk)
 
     grid = jax.jit(
         jax.vmap(                     # loads
@@ -282,7 +286,7 @@ def fig2_sweep(
     the default ceiling never binds at paper scale.
     """
     name = scheduler.lower()
-    if name == "megha":
+    if runtime.get_rule(name).needs_grid:
         num_workers = grid_workers(
             num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
         )
@@ -301,10 +305,8 @@ def fig2_sweep(
         num_workers=num_workers,
         seed=trace_seed,
     )
-    from repro.simx.engine import estimate_rounds
-
     num_rounds = max(
-        estimate_rounds(
+        engine.estimate_rounds(
             cfg,
             dataclasses.replace(tasks, submit=submit_g[i], job_submit=job_submit_g[i]),
             slack=slack,
@@ -313,8 +315,8 @@ def fig2_sweep(
     )
     out = sweep_grid(
         name, cfg, tasks, submit_g, job_submit_g, jnp.arange(num_seeds), num_rounds,
-        match_fn=simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret),
-        pick_fn=simx_megha.default_match_fn(
+        match_fn=default_match_fn(use_pallas=use_pallas, interpret=interpret),
+        pick_fn=default_match_fn(
             use_pallas=use_pallas, interpret=interpret, block_rows=1
         ),
     )
@@ -340,13 +342,14 @@ def fault_sweep_grid(
     ``point_summary`` fields stacked to ``[F, S]`` arrays (``lost`` counts
     the in-flight tasks crashes destroyed per point)."""
     name = scheduler.lower()
-    sim = SIMULATE_FIXED[name]
-    sim_kw = _sim_kwargs(name, match_fn, pick_fn)
+    runtime.get_rule(name)  # fail fast on unknown schedulers
 
     def point(fs, seed):
-        return point_summary(
-            sim(cfg, tasks, seed, num_rounds, faults=fs, **sim_kw), tasks
+        state = runtime.simulate_fixed(
+            name, cfg, tasks, seed, num_rounds,
+            match_fn=match_fn, pick_fn=pick_fn, faults=fs,
         )
+        return point_summary(state, tasks)
 
     grid = jax.jit(
         jax.vmap(                     # fault severities
@@ -391,7 +394,7 @@ def fig4_sweep(
     work behind dead workers until they return.
     """
     name = scheduler.lower()
-    if name == "megha":
+    if runtime.get_rule(name).needs_grid:
         num_workers = grid_workers(
             num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
         )
@@ -425,15 +428,13 @@ def fig4_sweep(
         heartbeat_delay=heartbeat_delay,
         seed=fault_seed,
     )
-    from repro.simx.engine import estimate_rounds
-
-    num_rounds = estimate_rounds(cfg, tasks, slack=slack) + int(
+    num_rounds = engine.estimate_rounds(cfg, tasks, slack=slack) + int(
         math.ceil((fail_time + outage) / dt)
     )
     out = fault_sweep_grid(
         name, cfg, tasks, schedules, jnp.arange(num_seeds), num_rounds,
-        match_fn=simx_megha.default_match_fn(use_pallas=use_pallas, interpret=interpret),
-        pick_fn=simx_megha.default_match_fn(
+        match_fn=default_match_fn(use_pallas=use_pallas, interpret=interpret),
+        pick_fn=default_match_fn(
             use_pallas=use_pallas, interpret=interpret, block_rows=1
         ),
     )

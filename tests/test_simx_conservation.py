@@ -1,0 +1,29 @@
+"""Hypothesis sweep of the per-round conservation property over every
+registered simx rule (random trace x random fault schedule), plus the
+oracle lower bound on each drawn instance — the checker itself lives in
+``tests/test_simx_runtime.py`` (where two pinned examples keep it running
+without hypothesis)."""
+
+from conftest import require_or_skip_hypothesis
+
+require_or_skip_hypothesis()
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_simx_runtime import check_conservation_and_oracle_bound  # noqa: E402
+
+
+@settings(max_examples=5, deadline=None, derandomize=True)
+@given(
+    trace_seed=st.integers(0, 3),
+    num_jobs=st.integers(4, 8),
+    tasks_per_job=st.integers(4, 12),
+    load=st.sampled_from([0.6, 0.9]),
+    fraction=st.sampled_from([0.0, 0.25]),
+    fault_seed=st.integers(0, 2),
+)
+def test_round_conservation_and_oracle_bound(
+    trace_seed, num_jobs, tasks_per_job, load, fraction, fault_seed
+):
+    check_conservation_and_oracle_bound(
+        trace_seed, num_jobs, tasks_per_job, load, fraction, fault_seed
+    )
