@@ -46,6 +46,18 @@ Two sections:
    leaves), the dense-era GiB figure, and the overflow counter.  Runs
    with ``--full`` (50k-worker compiles cost minutes, like the rest of
    that tier); ``--only-bigjob`` prints just these rows.
+
+5. **Telemetry traces** (``--trace``; ``--only-trace`` is the CI smoke
+   entrypoint) — one telemetry-enabled run per registered rule on a
+   shared tiny trace, written as a combined Chrome-trace JSON (one
+   counter-track process per rule; load it in ``chrome://tracing`` or
+   Perfetto) plus one bench row per rule carrying the control-plane
+   overhead counters.
+
+Every invocation also merges its rows into ``BENCH_simx.json`` — a JSON
+array keyed by (git rev, bench name), the machine-readable trajectory
+that makes speed/overhead regressions diffable across PRs (disable with
+``--bench-json none``).
 """
 
 from __future__ import annotations
@@ -87,6 +99,59 @@ FAULTS_FULL = dict(
     fractions=(0.0, 0.05, 0.1, 0.2), num_seeds=2, num_workers=10_000,
     num_jobs=100, tasks_per_job=500, outage=5.0, gm_outages=2, dt=0.05,
 )
+
+#: This invocation's machine-readable rows (mirrors the printed CSV).
+_BENCH_ROWS: list[dict] = []
+
+
+def _record(name: str, us: float, **derived) -> str:
+    """Record one bench row: append the machine-readable dict to the
+    ``BENCH_simx.json`` trajectory buffer and return the human CSV line
+    the bench harness prints (``name,us_per_call,k=v;k=v``)."""
+    _BENCH_ROWS.append(
+        {"name": name, "us_per_call": round(float(us), 3), **derived}
+    )
+    txt = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.2f},{txt}"
+
+
+def _git_rev() -> str:
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True, timeout=10,
+        ).stdout.strip()
+        return out or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(rows: list[dict], path: str = "BENCH_simx.json") -> None:
+    """Merge this invocation's rows into the append-style trajectory file:
+    a JSON array of rows keyed by (git rev, bench name).  Re-running a
+    bench at the same rev replaces its row; other revs' rows are kept, so
+    the file accumulates the across-PR trajectory ``benchmarks/run.py``
+    and CI diff.  A missing or corrupt file is treated as empty."""
+    import json
+
+    rev = _git_rev()
+    stamped = [{"rev": rev, **r} for r in rows]
+    try:
+        with open(path) as f:
+            existing = json.load(f)
+        if not isinstance(existing, list):
+            existing = []
+    except (FileNotFoundError, json.JSONDecodeError):
+        existing = []
+    fresh = {(r["rev"], r["name"]) for r in stamped}
+    merged = [
+        r for r in existing if (r.get("rev"), r.get("name")) not in fresh
+    ] + stamped
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+        f.write("\n")
 
 
 def _trace(workers: int):
@@ -132,12 +197,21 @@ def _sweep_rows(full: bool) -> list[str]:
         total = int(r["num_tasks"]) * grid_pts
         done = int(np.sum(r["tasks_done"]))
         p50_top = float(np.mean(r["p50"][-1]))  # highest load, seed-averaged
+        derived = dict(
+            tasks_per_sec=round(total / wall),
+            wall_s=round(wall, 2),
+            grid=f"{len(spec['loads'])}x{spec['num_seeds']}",
+            rounds=int(r["num_rounds"]),
+            done=f"{done}/{total}",
+            messages=int(np.sum(r["messages"])),
+            probes=int(np.sum(r["probes"])),
+            mean_util=round(float(np.mean(r["mean_util"])), 4),
+        )
+        derived[f"p50_load{spec['loads'][-1]:g}"] = round(p50_top, 3)
+        if sched == "megha":
+            derived["inconsistencies"] = int(np.sum(r["inconsistencies"]))
         rows.append(
-            f"simx_fig2_{sched},{wall * 1e6 / max(total, 1):.2f},"
-            f"tasks_per_sec={total / wall:.0f};wall={wall:.2f}s;"
-            f"grid={len(spec['loads'])}x{spec['num_seeds']};"
-            f"rounds={int(r['num_rounds'])};done={done}/{total};"
-            f"p50_load{spec['loads'][-1]:g}={p50_top:.3f}s"
+            _record(f"simx_fig2_{sched}", wall * 1e6 / max(total, 1), **derived)
         )
     return rows
 
@@ -163,12 +237,20 @@ def _fault_rows(full: bool, schedulers=None) -> list[str]:
         total = int(r["num_tasks"]) * grid_pts
         done = int(np.sum(r["tasks_done"]))
         p95 = r["p95"].mean(axis=1)  # seed-averaged per fraction
+        derived = dict(
+            tasks_per_sec=round(total / wall),
+            wall_s=round(wall, 2),
+            grid=f"{len(spec['fractions'])}x{spec['num_seeds']}",
+            done=f"{done}/{total}",
+            lost_top=int(np.sum(r["lost"][-1])),
+            messages=int(np.sum(r["messages"])),
+            p95_f0=round(float(p95[0]), 3),
+        )
+        derived[f"p95_f{spec['fractions'][-1]:g}"] = round(float(p95[-1]), 3)
+        if sched == "megha":
+            derived["inconsistencies"] = int(np.sum(r["inconsistencies"]))
         rows.append(
-            f"simx_fig4_{sched},{wall * 1e6 / max(total, 1):.2f},"
-            f"tasks_per_sec={total / wall:.0f};wall={wall:.2f}s;"
-            f"grid={len(spec['fractions'])}x{spec['num_seeds']};"
-            f"done={done}/{total};lost_top={int(np.sum(r['lost'][-1]))};"
-            f"p95_f0={p95[0]:.3f}s;p95_f{spec['fractions'][-1]:g}={p95[-1]:.3f}s"
+            _record(f"simx_fig4_{sched}", wall * 1e6 / max(total, 1), **derived)
         )
     return rows
 
@@ -217,14 +299,19 @@ def _bigjob_rows() -> list[str]:
         state = jax.block_until_ready(sim(cfg, tasks, 0, rounds))
         wall = time.time() - t0
         done = int((state.task_finish <= state.t).sum())
-        rows.append(
-            f"simx_bigjob_{sched},{wall * 1e6 / tasks.num_tasks:.2f},"
-            f"tasks_per_sec={tasks.num_tasks / wall:.0f};wall={wall:.2f}s;"
-            f"jobs={spec['num_jobs']};workers={spec['num_workers']};"
-            f"rounds={rounds};done={done}/{tasks.num_tasks};"
-            f"state_mb={state_bytes / 2**20:.1f};dense_gb={dense_gb:.1f};"
-            f"overflow={int(state.res_overflow)};lag={int(state.probe_lag)}"
-        )
+        rows.append(_record(
+            f"simx_bigjob_{sched}", wall * 1e6 / tasks.num_tasks,
+            tasks_per_sec=round(tasks.num_tasks / wall),
+            wall_s=round(wall, 2),
+            jobs=spec["num_jobs"],
+            workers=spec["num_workers"],
+            rounds=rounds,
+            done=f"{done}/{tasks.num_tasks}",
+            state_mb=round(state_bytes / 2**20, 1),
+            dense_gb=round(dense_gb, 1),
+            overflow=int(state.res_overflow),
+            lag=int(state.probe_lag),
+        ))
     return rows
 
 
@@ -271,12 +358,12 @@ def _doneprobe_row() -> list[str]:
     for s in states:
         bool(probe(s))               # retired: second dispatch per chunk
     two = (time.time() - t0) / reps
-    return [
-        f"simx_doneprobe,{fused * 1e6:.2f},"
-        f"fused_probe_us_per_chunk={fused * 1e6:.1f};"
-        f"second_dispatch_us_per_chunk={two * 1e6:.1f};"
-        f"saved_us_per_chunk={max(two - fused, 0.0) * 1e6:.1f}"
-    ]
+    return [_record(
+        "simx_doneprobe", fused * 1e6,
+        fused_probe_us_per_chunk=round(fused * 1e6, 1),
+        second_dispatch_us_per_chunk=round(two * 1e6, 1),
+        saved_us_per_chunk=round(max(two - fused, 0.0) * 1e6, 1),
+    )]
 
 
 #: The oracle-gap smoke grid: one shared (load x seed) point, small enough
@@ -301,15 +388,16 @@ def _oracle_gap_row() -> list[str]:
     wall = time.time() - t0
     o50, o95 = float(oracle["p50"][0, 0]), float(oracle["p95"][0, 0])
     done = int(np.sum(oracle["tasks_done"]))
-    return [
-        f"simx_oracle_gap,{wall:.2f},"
-        f"oracle_p50={o50:.3f}s;oracle_p95={o95:.3f}s;"
-        f"megha_gap_p50={float(megha['p50'][0, 0]) - o50:.3f}s;"
-        f"megha_gap_p95={float(megha['p95'][0, 0]) - o95:.3f}s;"
-        f"sparrow_gap_p50={float(sparrow['p50'][0, 0]) - o50:.3f}s;"
-        f"sparrow_gap_p95={float(sparrow['p95'][0, 0]) - o95:.3f}s;"
-        f"done={done}/{int(oracle['num_tasks'])}"
-    ]
+    return [_record(
+        "simx_oracle_gap", wall,
+        oracle_p50=round(o50, 3),
+        oracle_p95=round(o95, 3),
+        megha_gap_p50=round(float(megha["p50"][0, 0]) - o50, 3),
+        megha_gap_p95=round(float(megha["p95"][0, 0]) - o95, 3),
+        sparrow_gap_p50=round(float(sparrow["p50"][0, 0]) - o50, 3),
+        sparrow_gap_p95=round(float(sparrow["p95"][0, 0]) - o95, 3),
+        done=f"{done}/{int(oracle['num_tasks'])}",
+    )]
 
 
 def _fault_smoke_row() -> list[str]:
@@ -324,14 +412,70 @@ def _fault_smoke_row() -> list[str]:
     wall = time.time() - t0
     done = int(np.sum(r["tasks_done"]))
     total = 2 * int(r["num_tasks"])
-    return [
-        f"simx_fig4_smoke,{wall * 1e6 / total:.2f},"
-        f"wall={wall:.2f}s;done={done}/{total};"
-        f"lost={int(np.sum(r['lost']))};p95_f0.2={float(r['p95'][-1, 0]):.3f}s"
-    ]
+    derived = dict(
+        wall_s=round(wall, 2),
+        done=f"{done}/{total}",
+        lost=int(np.sum(r["lost"])),
+    )
+    derived["p95_f0.2"] = round(float(r["p95"][-1, 0]), 3)
+    return [_record("simx_fig4_smoke", wall * 1e6 / total, **derived)]
 
 
-def run(full: bool = False, faults: bool = False) -> list[str]:
+#: The --trace grid: one tiny telemetry-enabled run per registered rule.
+TRACE = dict(num_jobs=16, tasks_per_job=64, load=0.8, num_workers=256, seed=13)
+
+
+def _trace_rows(trace_out: str = "simx_trace.json") -> list[str]:
+    """Section 5 (``--trace``): run every registered rule with telemetry on
+    a shared tiny trace, write the combined Chrome-trace JSON (one
+    counter-track process per rule; loads in ``chrome://tracing`` /
+    Perfetto), and record one overhead row per rule."""
+    import json
+
+    from repro.simx.telemetry import TelemetryConfig
+
+    wl = synthetic_trace(**TRACE)
+    tel = TelemetryConfig(stride=4)
+    megha_kw = dict(num_gms=4, num_lms=4, heartbeat_interval=1.0)
+    events: list[dict] = []
+    rows = []
+    for pid, sched in enumerate(sxe.SCHEDULERS, start=1):
+        t0 = time.time()
+        run = sxe.simulate_workload(
+            sched, wl, TRACE["num_workers"], telemetry=tel,
+            **(megha_kw if sched == "megha" else {}),
+        )
+        wall = time.time() - t0
+        tl = run.timeline
+        events.extend(
+            tl.to_chrome_trace(pid=pid, process_name=f"simx:{sched}")["traceEvents"]
+        )
+        series = {k: np.asarray(v) for k, v in tl.series.items()}
+        derived = dict(
+            wall_s=round(wall, 2),
+            samples=tl.num_samples,
+            stride=tl.stride,
+            launches=int(series["launches"].sum()),
+            messages=int(run.state.messages),
+            probes=int(run.state.probes),
+            peak_util=round(float(series["utilization"].max()), 4),
+        )
+        if sched == "megha":
+            derived["inconsistencies"] = int(run.state.inconsistencies)
+            derived["view_repairs"] = int(series["view_repairs"].sum())
+        rows.append(_record(f"simx_trace_{sched}", wall * 1e6, **derived))
+    with open(trace_out, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    return rows
+
+
+def run(
+    full: bool = False,
+    faults: bool = False,
+    trace: bool = False,
+    trace_out: str = "simx_trace.json",
+    bench_json: str | None = "BENCH_simx.json",
+) -> list[str]:
     rows = []
     for workers in DC_SIZES_FULL if full else DC_SIZES:
         wl = _trace(workers)
@@ -341,20 +485,24 @@ def run(full: bool = False, faults: bool = False) -> list[str]:
         run_simulation("megha", wl, num_workers=workers, seed=0)
         ev_wall = time.time() - t0
         ev_tps = n_tasks / ev_wall
-        rows.append(
-            f"simx_dc{workers}_events,{ev_wall * 1e6 / n_tasks:.2f},"
-            f"tasks_per_sec={ev_tps:.0f};wall={ev_wall:.2f}s;tasks={n_tasks}"
-        )
+        rows.append(_record(
+            f"simx_dc{workers}_events", ev_wall * 1e6 / n_tasks,
+            tasks_per_sec=round(ev_tps),
+            wall_s=round(ev_wall, 2),
+            tasks=n_tasks,
+        ))
 
         for dt in (0.05, 0.1):
             r = _simx_point(wl, workers, dt)
             tps = n_tasks / r["wall"]
-            rows.append(
-                f"simx_dc{workers}_simx_dt{dt:g},{r['wall'] * 1e6 / n_tasks:.2f},"
-                f"tasks_per_sec={tps:.0f};wall={r['wall']:.2f}s;"
-                f"compile={r['compile']:.2f}s;done={r['done']}/{n_tasks};"
-                f"speedup={tps / ev_tps:.1f}x"
-            )
+            rows.append(_record(
+                f"simx_dc{workers}_simx_dt{dt:g}", r["wall"] * 1e6 / n_tasks,
+                tasks_per_sec=round(tps),
+                wall_s=round(r["wall"], 2),
+                compile_s=round(r["compile"], 2),
+                done=f"{r['done']}/{n_tasks}",
+                speedup=round(tps / ev_tps, 1),
+            ))
     rows.extend(_sweep_rows(full))
     if full:  # 50k-worker compiles: minutes of wall clock, like the rest of --full
         rows.extend(_bigjob_rows())
@@ -363,6 +511,10 @@ def run(full: bool = False, faults: bool = False) -> list[str]:
     rows.extend(_fault_smoke_row())
     if faults:
         rows.extend(_fault_rows(full))
+    if trace:
+        rows.extend(_trace_rows(trace_out))
+    if bench_json:
+        write_bench_json(_BENCH_ROWS, bench_json)
     return rows
 
 
@@ -380,14 +532,32 @@ if __name__ == "__main__":
     ap.add_argument("--only-oracle", action="store_true",
                     help="print just the oracle-gap smoke row (the CI "
                          "oracle entrypoint)")
+    ap.add_argument("--trace", action="store_true",
+                    help="add the telemetry trace rows and write the "
+                         "Chrome-trace JSON")
+    ap.add_argument("--only-trace", action="store_true",
+                    help="print just the telemetry trace rows (the CI "
+                         "telemetry smoke entrypoint)")
+    ap.add_argument("--trace-out", default="simx_trace.json",
+                    help="Chrome-trace JSON output path (default "
+                         "simx_trace.json)")
+    ap.add_argument("--bench-json", default="BENCH_simx.json",
+                    help="machine-readable trajectory file to merge rows "
+                         "into ('none' disables)")
     args = ap.parse_args()
+    bench_json = None if args.bench_json.lower() == "none" else args.bench_json
     if args.only_faults:
         out = _fault_smoke_row() + (_fault_rows(args.full) if args.faults else [])
     elif args.only_bigjob:
         out = _bigjob_rows()
     elif args.only_oracle:
         out = _oracle_gap_row()
+    elif args.only_trace:
+        out = _trace_rows(args.trace_out)
     else:
-        out = run(full=args.full, faults=args.faults)
+        out = run(full=args.full, faults=args.faults, trace=args.trace,
+                  trace_out=args.trace_out, bench_json=None)
+    if bench_json:
+        write_bench_json(_BENCH_ROWS, bench_json)
     for r in out:
         print(r)

@@ -16,6 +16,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--faults", action="store_true",
                     help="add the simx Fig. 4 fault-severity grid rows")
+    ap.add_argument("--trace", action="store_true",
+                    help="add the simx telemetry trace rows (writes the "
+                         "Chrome-trace JSON)")
+    ap.add_argument("--bench-json", default="BENCH_simx.json",
+                    help="simx trajectory file to merge rows into "
+                         "('none' disables)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: comparison,scalability,"
                          "prototype,sdps,workloads,kernels,simx")
@@ -44,7 +50,16 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in picked:
         t0 = time.time()
-        kw = {"faults": True} if (args.faults and name == "simx") else {}
+        kw = {}
+        if name == "simx":
+            # only the simx suite knows these knobs; others keep run(full=)
+            kw["bench_json"] = (
+                None if args.bench_json.lower() == "none" else args.bench_json
+            )
+            if args.faults:
+                kw["faults"] = True
+            if args.trace:
+                kw["trace"] = True
         for row in suites[name].run(full=args.full, **kw):
             print(row)
         print(f"suite_{name}_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",

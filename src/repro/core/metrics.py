@@ -88,6 +88,18 @@ class RunMetrics:
         """Inconsistency events per task request (Fig. 2b)."""
         return self.inconsistencies / max(1, len(self.tasks))
 
+    def overhead_summary(self) -> dict:
+        """The control-plane overhead counters as one dict — the same
+        fields the simx telemetry layer reports per sweep point
+        (``sweep.point_summary``), so backend parity checks and quickstart
+        tables read both sides through one shape."""
+        return {
+            "messages": self.messages,
+            "probes": self.probes,
+            "inconsistencies": self.inconsistencies,
+            "inconsistency_rate": self.inconsistency_ratio,
+        }
+
     def job_delays(self, long: Optional[bool] = None) -> list[float]:
         return [
             j.delay
@@ -104,6 +116,7 @@ class RunMetrics:
             "inconsistency_ratio": self.inconsistency_ratio,
             "repartitions": self.repartitions,
             "messages": self.messages,
+            "probes": self.probes,
         }
         for cls, name in ((None, "all"), (False, "short"), (True, "long")):
             d = self.job_delays(cls)

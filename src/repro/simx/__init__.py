@@ -58,6 +58,7 @@ from repro.simx.sweep import (
     point_summary,
     sweep_grid,
 )
+from repro.simx.telemetry import TelemetryConfig, Timeline
 
 def __getattr__(name: str):
     """``SCHEDULERS`` stays a live view of the rule registry (see
@@ -85,6 +86,8 @@ __all__ = [
     "OracleState",
     "PigeonState",
     "SparrowState",
+    "TelemetryConfig",
+    "Timeline",
     "WorkerFailure",
     "compose_step",
     "default_match_fn",

@@ -89,6 +89,7 @@ def make_eagle_step(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[EagleState], EagleState]:
     """Build the jittable one-round transition function.
 
@@ -250,6 +251,10 @@ def make_eagle_step(
         )
         messages = messages + 2 * jnp.sum(launch2, dtype=jnp.int32)
 
+        n_launch = (
+            jnp.sum(launch1, dtype=jnp.int32) + jnp.sum(launch2, dtype=jnp.int32)
+        )
+
         # -- 4. central scheduler: queued long window -> free long partition
         if NL:
             wtask = jax.lax.dynamic_slice(long_fifo, (long_head,), (CL,))
@@ -270,12 +275,13 @@ def make_eagle_step(
                 launch3, sel_task, start, task_finish, worker_finish, worker_task
             )
             messages = messages + jnp.sum(launch3, dtype=jnp.int32)
+            n_launch = n_launch + jnp.sum(launch3, dtype=jnp.int32)
             # advance the head past the launched prefix
             fpad2 = rt.finish_pad(task_finish)
             launched2 = rt.window_launched(fpad2, wtask, T)
             long_head = jnp.minimum(long_head + rt.launched_lead(launched2), NL)
 
-        return dict(
+        upd = dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
@@ -287,8 +293,13 @@ def make_eagle_step(
             messages=messages,
             probes=probes,
         )
+        if telemetry:
+            upd["telemetry"] = dict(
+                launches=n_launch, sss_rejections=n_rej0 + n_rej1
+            )
+        return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults)
+    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
 
 
 def simulate_fixed(
@@ -316,8 +327,11 @@ def _build_step(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[EagleState], EagleState]:
-    return make_eagle_step(cfg, tasks, key, match_fn, pick_fn, faults=faults)
+    return make_eagle_step(
+        cfg, tasks, key, match_fn, pick_fn, faults=faults, telemetry=telemetry
+    )
 
 
 RULE = rt.register_rule(

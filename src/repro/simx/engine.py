@@ -145,6 +145,7 @@ from repro.simx.state import (
     TaskArrays,
     export_workload,
 )
+from repro.simx.telemetry import TelemetryConfig, Timeline
 from repro.workload.traces import Workload
 
 def __getattr__(name: str):
@@ -208,6 +209,75 @@ def run_to_completion(
     return state
 
 
+def run_to_completion_telemetry(
+    step: Callable,
+    state,
+    tel: TelemetryConfig,
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    *,
+    faults: FaultSchedule | None = None,
+    chunk: int = 256,
+    max_rounds: int = 1_000_000,
+) -> tuple:
+    """Telemetry counterpart of ``run_to_completion``: drive a
+    telemetry-enabled ``step`` (returns ``(state, counters)`` per round) in
+    jitted chunks of whole telemetry windows, collecting the decimated
+    series blocks on the host.  Returns ``(state, Timeline)``.
+
+    The chunk is rounded down to a multiple of ``tel.stride`` (min one
+    window) so every chunk emits whole windows; a final partial chunk keeps
+    ``max_rounds`` exact — its trailing ``< stride`` rounds advance the
+    state but are not sampled, same as ``scan_rounds_telemetry``."""
+    from repro.simx import telemetry as tlm
+
+    stride = tel.stride
+    chunk = max(stride, (chunk // stride) * stride)
+    sample_fn = tlm.default_sample_fn(cfg, tasks, faults)
+
+    @jax.jit
+    def run_chunk(s):
+        s, series = tlm.scan_blocks(step, s, chunk // stride, stride, sample_fn)
+        return s, series, jnp.all(s.task_finish <= s.t)
+
+    blocks: list[dict] = []
+    rounds = 0
+    while rounds < max_rounds:
+        n = min(chunk, max_rounds - rounds)
+        if n == chunk:
+            state, series, done = run_chunk(state)
+            blocks.append(series)
+        else:
+            k = n // stride
+            if k:
+                state, series = tlm.scan_blocks(step, state, k, stride, sample_fn)
+                blocks.append(series)
+            if n - k * stride:
+                state = tlm.advance_plain(step, state, n - k * stride)
+            done = jnp.all(state.task_finish <= state.t)
+        rounds += n
+        if bool(done):
+            break
+    if blocks:
+        series = {
+            key: np.concatenate([np.asarray(b[key]) for b in blocks])
+            for key in blocks[0]
+        }
+    else:
+        series = {}
+    t_axis = series.pop("t", np.zeros(0, np.float32))
+    hist = tlm.delay_histogram(state.task_finish, state.t, tasks, tel)
+    timeline = Timeline(
+        t=jnp.asarray(t_axis),
+        series={k: jnp.asarray(v) for k, v in series.items()},
+        delay_hist=hist,
+        stride=stride,
+        dt=cfg.dt,
+        delay_max=tel.delay_max,
+    )
+    return state, timeline
+
+
 def estimate_rounds(cfg: SimxConfig, tasks: TaskArrays, slack: float = 4.0) -> int:
     """Upper-bound round count: arrival span + ``slack`` x the perfectly
     packed drain time + the longest task + one heartbeat interval."""
@@ -230,6 +300,7 @@ class SimxRun:
     cfg: SimxConfig
     tasks: TaskArrays
     state: CoreState
+    timeline: Optional[Timeline] = None
 
     @property
     def end_time(self) -> float:
@@ -360,6 +431,7 @@ def simulate_workload(
     use_pallas: bool = False,
     interpret: bool = True,
     faults: FaultSchedule | FaultPlan | None = None,
+    telemetry: TelemetryConfig | bool | None = None,
 ) -> SimxRun:
     """Run one (scheduler, workload) simx simulation to completion.
 
@@ -374,6 +446,11 @@ def simulate_workload(
     fault schedule (a dense ``FaultSchedule`` or a backend-neutral
     ``FaultPlan``) into the compiled round step — see the module docstring
     for the fault-timing contract.
+
+    ``telemetry`` (a ``TelemetryConfig``, or ``True`` for the defaults)
+    collects the decimated in-scan series and delay histogram; the run's
+    ``Timeline`` lands on ``SimxRun.timeline``.  ``None`` (the default)
+    builds today's telemetry-free program bit-for-bit.
     """
     name = scheduler.lower()
     rule = runtime.get_rule(name)
@@ -420,9 +497,12 @@ def simulate_workload(
     pick_fn = runtime.default_match_fn(
         use_pallas=use_pallas, interpret=interpret, block_rows=1
     )
+    if telemetry is True:
+        telemetry = TelemetryConfig()
     # any registered rule builds and runs through the same three calls
     step = rule.build_step(
-        cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults
+        cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults,
+        telemetry=telemetry is not None,
     )
     state = rule.init(cfg, tasks)
     cap = max_rounds if max_rounds is not None else estimate_rounds(cfg, tasks)
@@ -437,11 +517,19 @@ def simulate_workload(
             cap += int(math.ceil(float(finite.max()) / dt)) + cfg.heartbeat_rounds
     if until is not None:
         cap = min(cap, int(math.ceil(until / dt)))
-    state = run_to_completion(step, state, chunk=chunk, max_rounds=cap)
+    if telemetry is None:
+        state = run_to_completion(step, state, chunk=chunk, max_rounds=cap)
+        timeline = None
+    else:
+        state, timeline = run_to_completion_telemetry(
+            step, state, telemetry, cfg, tasks,
+            faults=faults, chunk=chunk, max_rounds=cap,
+        )
     return SimxRun(
         scheduler=name,
         workload_name=workload.name,
         cfg=cfg,
         tasks=tasks,
         state=state,
+        timeline=timeline,
     )

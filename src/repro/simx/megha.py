@@ -75,6 +75,7 @@ def make_megha_step(
     orders: jax.Array,
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[MeghaState], MeghaState]:
     """Build the jittable one-round transition function.
 
@@ -253,6 +254,11 @@ def make_megha_step(
         view = piggyback(view, truth, inval_gl, adopt)
         batch_gl = (proposed_i[:, :, None] & (lm_int[:, :, None] == l_row)).any(axis=1)
         messages = messages + 2 * jnp.sum(batch_gl, dtype=jnp.int32)
+        if telemetry:
+            # per-round counters: launches + piggybacked [GM, LM] view
+            # repairs (§3.4.1), accumulated through the borrow cond's carry
+            tel_launch = jnp.sum(launch_w, dtype=jnp.int32)
+            tel_repair = jnp.sum(inval_gl, dtype=jnp.int32)
 
         # -- 4. borrow match (full [G, W] pass, only when queues outrun the
         #       internal views) --------------------------------------------
@@ -261,7 +267,7 @@ def make_megha_step(
 
         def borrow(args):
             (view, truth, task_finish, worker_finish, worker_task, worker_gm,
-             worker_borrowed, inconsistencies, repartitions, messages) = args
+             worker_borrowed, inconsistencies, repartitions, messages) = args[:10]
             fpad2 = rt.finish_pad(task_finish)
             launched2 = rt.window_launched(fpad2, wtask, T)
             queued2 = ~launched2 & (wsubmit <= t)
@@ -308,29 +314,37 @@ def make_megha_step(
             launched_by_g = launch[None, :] & (g_col == win_g[None, :])
             invalid = proposed & ~launched_by_g                    # bool[G,W]
             inconsistencies = inconsistencies + jnp.sum(invalid, dtype=jnp.int32)
-            view = piggyback(
-                view, truth, invalid.reshape(G, L, wpl).any(axis=2), adopt
-            )
+            inval2_gl = invalid.reshape(G, L, wpl).any(axis=2)
+            view = piggyback(view, truth, inval2_gl, adopt)
             batch2 = proposed.reshape(G, L, wpl).any(axis=2)
             messages = messages + 2 * jnp.sum(batch2, dtype=jnp.int32)
-            return (view, truth, task_finish, worker_finish, worker_task,
-                    worker_gm, worker_borrowed, inconsistencies, repartitions,
-                    messages)
+            out = (view, truth, task_finish, worker_finish, worker_task,
+                   worker_gm, worker_borrowed, inconsistencies, repartitions,
+                   messages)
+            if telemetry:
+                out = out + (
+                    args[10] + jnp.sum(launch, dtype=jnp.int32),
+                    args[11] + jnp.sum(inval2_gl, dtype=jnp.int32),
+                )
+            return out
 
         carry = (view, truth, task_finish, worker_finish, worker_task,
                  worker_gm, worker_borrowed, inconsistencies, s.repartitions,
                  messages)
+        if telemetry:
+            carry = carry + (tel_launch, tel_repair)
+        carry = jax.lax.cond(need_borrow, borrow, lambda a: a, carry)
         (view, truth, task_finish, worker_finish, worker_task, worker_gm,
-         worker_borrowed, inconsistencies, repartitions, messages) = jax.lax.cond(
-            need_borrow, borrow, lambda a: a, carry
-        )
+         worker_borrowed, inconsistencies, repartitions, messages) = carry[:10]
+        if telemetry:
+            tel_launch, tel_repair = carry[10], carry[11]
 
         # -- 5. advance each GM's FIFO head past its launched prefix --------
         fpad3 = rt.finish_pad(task_finish)
         launched3 = rt.window_launched(fpad3, wtask, T)            # bool[G,C]
         head = jnp.minimum(head0 + rt.launched_lead(launched3), tg)
 
-        return dict(
+        upd = dict(
             task_finish=task_finish,
             head=head,
             worker_finish=worker_finish,
@@ -342,8 +356,13 @@ def make_megha_step(
             repartitions=repartitions,
             messages=messages,
         )
+        if telemetry:
+            upd["telemetry"] = dict(
+                launches=tel_launch, view_repairs=tel_repair
+            )
+        return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults)
+    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
 
 
 def simulate_fixed(
@@ -371,9 +390,13 @@ def _build_step(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[MeghaState], MeghaState]:
     del pick_fn  # megha has no reservation queues
-    return make_megha_step(cfg, tasks, gm_orders(key, cfg), match_fn, faults=faults)
+    return make_megha_step(
+        cfg, tasks, gm_orders(key, cfg), match_fn, faults=faults,
+        telemetry=telemetry,
+    )
 
 
 RULE = rt.register_rule(

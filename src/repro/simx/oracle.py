@@ -45,6 +45,7 @@ def make_oracle_step(
     tasks: TaskArrays,
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[OracleState], OracleState]:
     """Build the jittable one-round transition function.
 
@@ -102,15 +103,18 @@ def make_oracle_step(
         launched2 = rt.window_launched(fpad2, wtask, T)
         head = jnp.minimum(head0 + rt.launched_lead(launched2), T)
 
-        return dict(
+        upd = dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
             head=head,
             messages=messages,
         )
+        if telemetry:
+            upd["telemetry"] = dict(launches=jnp.sum(launch, dtype=jnp.int32))
+        return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults)
+    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
 
 
 def simulate_fixed(
@@ -136,9 +140,10 @@ def _build_step(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[OracleState], OracleState]:
     del key, pick_fn  # deterministic, no reservation queues
-    return make_oracle_step(cfg, tasks, match_fn, faults=faults)
+    return make_oracle_step(cfg, tasks, match_fn, faults=faults, telemetry=telemetry)
 
 
 RULE = rt.register_rule(

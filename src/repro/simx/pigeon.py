@@ -65,6 +65,7 @@ def make_pigeon_step(
     tasks: TaskArrays,
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[PigeonState], PigeonState]:
     """Build the jittable one-round transition function.
 
@@ -283,7 +284,7 @@ def make_pigeon_step(
             high_head = jnp.minimum(high_head0 + lead_h, len_h)
             low_head = jnp.minimum(low_head0 + lead_l, len_l)
 
-        return dict(
+        upd = dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
@@ -292,8 +293,14 @@ def make_pigeon_step(
             since_low=since_low,
             messages=messages,
         )
+        if telemetry:
+            upd["telemetry"] = dict(
+                launches=jnp.sum(launch, dtype=jnp.int32),
+                reserve_hits=jnp.sum(n_high_r, dtype=jnp.int32),
+            )
+        return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults)
+    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
 
 
 def simulate_fixed(
@@ -320,9 +327,10 @@ def _build_step(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[PigeonState], PigeonState]:
     del key, pick_fn  # static round-robin distribution, no queues
-    return make_pigeon_step(cfg, tasks, match_fn, faults=faults)
+    return make_pigeon_step(cfg, tasks, match_fn, faults=faults, telemetry=telemetry)
 
 
 RULE = rt.register_rule(

@@ -22,8 +22,17 @@ re-implementation of the round machinery (the omniscient oracle in
      ``sorted_fifo``, ``window_launched``, ``launched_lead``) and launch
      bookkeeping (``apply_launch``) helpers.  Receives the post-fault
      arrays, the stage-2 masks, and the crash-loss mask (for FIFO head
-     rollback); returns the state-field updates as a dict.
-  4. **metrics/advance** — the runtime folds the updates into the carried
+     rollback); returns the state-field updates as a dict — under
+     telemetry, optionally including a ``"telemetry"`` dict of per-round
+     counters (launches + rule extras).
+  4. **telemetry** (optional, ``compose_step(..., telemetry=True)``) —
+     the runtime pops the rule's counter dict, adds the per-round deltas
+     of the shared state counters, and the step returns
+     ``(state, counters)`` for the decimated in-scan collection driver
+     (``repro.simx.telemetry``).  Disabled (the default), nothing is
+     built and the program is exactly the telemetry-free one (pinned
+     bitwise by ``tests/test_simx_telemetry.py``).
+  5. **metrics/advance** — the runtime folds the updates into the carried
      state, accumulates the ``lost`` counter, and advances ``t``/``rnd``.
 
 Reporting shares one in-jit reduction too: ``job_delays_from_state`` is
@@ -47,7 +56,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.match import match_ranks_batched
 from repro.simx.faults import FaultSchedule, apply_worker_faults
-from repro.simx.state import SimxConfig, TaskArrays
+from repro.simx.state import QueueState, SimxConfig, TaskArrays
 
 #: rank-and-select primitive: (avail bool[B, N], n int32[B]) -> ranks
 #: int32[B, N] (rank of each selected column, -1 where unselected).
@@ -194,8 +203,18 @@ def fault_stage(
 
 #: Dispatch stage: (state, t, task_finish0, worker_finish0, free, comp,
 #: lost_w) -> dict of state-field updates (everything except t/rnd/lost,
-#: which the runtime advances).
+#: which the runtime advances).  Under ``telemetry=True`` the dict MAY
+#: additionally carry a ``"telemetry"`` key: a dict of per-round int32
+#: scalar counters (``launches`` expected of every rule, plus
+#: rule-specific extras) that the runtime pops before folding updates.
 DispatchFn = Callable[..., dict]
+
+#: The shared counters whose per-round deltas the telemetry stage derives
+#: itself (dispatch never has to report them): new - old of the carried
+#: ``CoreState`` accumulators, plus the ``QueueState`` health counters
+#: for reservation-queue rules.
+TELEMETRY_CORE_COUNTERS = ("messages", "probes", "inconsistencies", "lost")
+TELEMETRY_QUEUE_COUNTERS = ("res_overflow", "probe_lag")
 
 
 def compose_step(
@@ -203,12 +222,22 @@ def compose_step(
     tasks: TaskArrays,
     dispatch: DispatchFn,
     faults: Optional[FaultSchedule] = None,
+    telemetry: bool = False,
 ) -> Callable:
     """Assemble one rule's jittable round step from the stage contract:
-    ``faults -> complete -> dispatch -> metrics/advance`` (module
-    docstring).  ``dispatch`` owns everything scheduler-specific; the
-    runtime owns the fault transition, the ground-truth masks, the
-    ``lost`` accumulator, and the time/round advance."""
+    ``faults -> complete -> dispatch -> telemetry -> metrics/advance``
+    (module docstring).  ``dispatch`` owns everything scheduler-specific;
+    the runtime owns the fault transition, the ground-truth masks, the
+    ``lost`` accumulator, and the time/round advance.
+
+    With ``telemetry=True`` the step returns ``(state, counters)`` —
+    ``counters`` merges the rule's per-round ``"telemetry"`` dict with the
+    runtime-derived deltas of the shared state counters — for the
+    decimated collection driver (``repro.simx.telemetry``).  With
+    ``telemetry=False`` (the default) the step returns the state alone and
+    the stage compiles out entirely: nothing telemetry-related is ever
+    built, so the program is exactly the pre-telemetry one (final states
+    pinned bitwise by ``tests/test_simx_telemetry.py``)."""
     T = tasks.num_tasks
 
     def step(s):
@@ -218,9 +247,19 @@ def compose_step(
         )
         free, comp = completion_masks(worker_finish0, t, cfg.dt)
         updates = dispatch(s, t, task_finish0, worker_finish0, free, comp, lost_w)
+        tel = updates.pop("telemetry", None)
         if n_lost is not None:
             updates["lost"] = s.lost + n_lost
-        return s.replace(t=t + cfg.dt, rnd=s.rnd + 1, **updates)
+        new = s.replace(t=t + cfg.dt, rnd=s.rnd + 1, **updates)
+        if not telemetry:
+            return new
+        counters = dict(tel or {})
+        for f in TELEMETRY_CORE_COUNTERS:
+            counters[f] = getattr(new, f) - getattr(s, f)
+        if isinstance(new, QueueState):
+            for f in TELEMETRY_QUEUE_COUNTERS:
+                counters[f] = getattr(new, f) - getattr(s, f)
+        return new, counters
 
     return step
 
@@ -242,9 +281,11 @@ def scan_rounds(step: Callable, state, num_rounds: int):
 class Rule:
     """One scheduler in the simx matrix.
 
-    ``build_step(cfg, tasks, key, *, match_fn, pick_fn, faults)`` returns
-    the jittable round step (normally a ``compose_step`` of the rule's
-    dispatch stage); ``init(cfg, tasks)`` the fresh scan carry.
+    ``build_step(cfg, tasks, key, *, match_fn, pick_fn, faults,
+    telemetry)`` returns the jittable round step (normally a
+    ``compose_step`` of the rule's dispatch stage — with
+    ``telemetry=True`` the step reports per-round counters, see
+    ``compose_step``); ``init(cfg, tasks)`` the fresh scan carry.
     ``match_fn`` is the wide rank-and-select (GM rows / central FIFOs /
     group picks), ``pick_fn`` the narrow [W, R] head-of-queue pick of the
     reservation-queue rules — a rule consumes what it needs and ignores
@@ -291,19 +332,34 @@ def simulate_fixed(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry=None,
 ):
     """Run any registered rule exactly ``num_rounds`` rounds from a fresh
     DC — a pure function of ``seed`` (and the ``faults`` leaves), so an
     entire sweep grid runs as ``jax.vmap(simulate_fixed, ...)`` in one
     compiled program.  This replaces the per-module ``simulate_fixed``
     quadruplet (those survive as thin wrappers) and the hand-maintained
-    ``SIMULATE_FIXED`` dict in ``sweep``."""
+    ``SIMULATE_FIXED`` dict in ``sweep``.
+
+    ``telemetry`` (a ``repro.simx.telemetry.TelemetryConfig``) switches on
+    the in-scan telemetry stage: the return value becomes
+    ``(state, Timeline)`` — the decimated per-round series plus the
+    in-jit delay histogram, still fully traceable/vmappable.  ``None``
+    (the default) builds exactly the telemetry-free program."""
     rule = get_rule(name)
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
     step = rule.build_step(
-        cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults
+        cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults,
+        telemetry=telemetry is not None,
     )
-    return scan_rounds(step, rule.init(cfg, tasks), num_rounds)
+    state = rule.init(cfg, tasks)
+    if telemetry is None:
+        return scan_rounds(step, state, num_rounds)
+    from repro.simx import telemetry as tlm  # runtime <- telemetry cycle guard
+
+    return tlm.scan_rounds_telemetry(
+        step, state, num_rounds, telemetry, cfg, tasks, faults
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -315,6 +315,7 @@ def make_sparrow_step(
     key: jax.Array,
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[SparrowState], SparrowState]:
     """Build the jittable one-round transition function.
 
@@ -400,7 +401,7 @@ def make_sparrow_step(
         )
         messages = messages + 2 * jnp.sum(launch, dtype=jnp.int32)  # RPC + reply
 
-        return dict(
+        upd = dict(
             task_finish=task_finish,
             worker_finish=worker_finish,
             worker_task=worker_task,
@@ -411,8 +412,11 @@ def make_sparrow_step(
             probes=probes_ctr,
             messages=messages,
         )
+        if telemetry:
+            upd["telemetry"] = dict(launches=jnp.sum(launch, dtype=jnp.int32))
+        return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults)
+    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
 
 
 def simulate_fixed(
@@ -439,6 +443,7 @@ def _build_step(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
+    telemetry: bool = False,
 ) -> Callable[[SparrowState], SparrowState]:
     # sparrow's only rank-and-select is the [W, R] head-of-queue pick.
     # When both are supplied (the sweep drivers), pick_fn wins — the wide
@@ -448,7 +453,7 @@ def _build_step(
     # to the pick rather than being silently dropped.
     return make_sparrow_step(
         cfg, tasks, key, pick_fn if pick_fn is not None else match_fn,
-        faults=faults,
+        faults=faults, telemetry=telemetry,
     )
 
 

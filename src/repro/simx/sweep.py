@@ -53,7 +53,7 @@ from repro.simx import engine  # noqa: F401 — registers the rule modules
 from repro.simx import runtime
 from repro.simx.faults import FaultSchedule, fault_grid_schedule
 from repro.simx.runtime import MatchFn, default_match_fn
-from repro.simx.state import SimxConfig, TaskArrays, export_workload
+from repro.simx.state import QueueState, SimxConfig, TaskArrays, export_workload
 from repro.workload.synth import synthetic_trace
 
 log = logging.getLogger(__name__)
@@ -84,28 +84,65 @@ class _SimulateFixedView(Mapping):
 SIMULATE_FIXED: Mapping[str, Callable] = _SimulateFixedView()
 
 
-def point_summary(state, tasks: TaskArrays) -> dict[str, jax.Array]:
+def point_summary(
+    state, tasks: TaskArrays, has_queues: Optional[bool] = None
+) -> dict[str, jax.Array]:
     """Reduce one finished state to the Fig. 2 / Fig. 4 observables, inside
     jit: p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs, via the
     runtime's shared job-delay reduction), completion counts, the
-    crash-loss counter, and the reservation-queue health counters (0 for
-    rules that carry no queues) — a nonzero ``res_overflow`` or
-    ``probe_lag`` flags a point whose delays are distorted by a too-small
-    ``reserve_cap`` / ``probe_window``."""
+    crash-loss counter, the overhead columns the paper's thesis turns on
+    (mean worker utilization, total control messages and probes, megha's
+    inconsistency count and its per-task rate), and the reservation-queue
+    health counters — a nonzero ``res_overflow`` or ``probe_lag`` flags a
+    point whose delays are distorted by a too-small ``reserve_cap`` /
+    ``probe_window``.
+
+    ``has_queues`` gates the queue-counter reads (``Rule.has_queues``;
+    defaults to the state's class).  Gated reads are ATTRIBUTE reads: a
+    renamed counter field raises instead of silently reporting 0 forever.
+    Non-queue rules report literal zeros so grid outputs stay homogeneous
+    across schedulers.
+
+    ``mean_util`` is exact in closed form — each launched task occupied
+    its worker for ``clip(min(finish, t) - start, 0, duration)`` seconds
+    (finish was recorded at launch as start + duration), so no per-round
+    accumulation is needed: the busy integral divided by ``W * t``."""
+    if has_queues is None:
+        has_queues = isinstance(state, QueueState)
     done = state.task_finish <= state.t
     delays, job_finish = runtime.job_delays_from_state(
         state.task_finish, state.t, tasks
     )
-    return {
+    # min() before the subtraction: an unlaunched task has finish == inf,
+    # and min(inf, t) - (inf - d) = -inf clips to 0 without an inf - inf nan
+    busy = jnp.clip(
+        jnp.minimum(state.task_finish, state.t)
+        - (state.task_finish - tasks.duration),
+        0.0,
+        tasks.duration,
+    )
+    W = state.worker_finish.shape[0]
+    out = {
         "p50": jnp.nanpercentile(delays, 50),
         "p95": jnp.nanpercentile(delays, 95),
         "mean": jnp.nanmean(delays),
         "jobs_done": jnp.sum(jnp.isfinite(job_finish), dtype=jnp.int32),
         "tasks_done": jnp.sum(done, dtype=jnp.int32),
         "lost": state.lost,
-        "res_overflow": getattr(state, "res_overflow", jnp.int32(0)),
-        "probe_lag": getattr(state, "probe_lag", jnp.int32(0)),
+        "mean_util": jnp.sum(busy) / (W * jnp.maximum(state.t, 1e-9)),
+        "messages": state.messages,
+        "probes": state.probes,
+        "inconsistencies": state.inconsistencies,
+        "inconsistency_rate": state.inconsistencies
+        / jnp.float32(max(tasks.num_tasks, 1)),
     }
+    if has_queues:
+        out["res_overflow"] = state.res_overflow
+        out["probe_lag"] = state.probe_lag
+    else:
+        out["res_overflow"] = jnp.int32(0)
+        out["probe_lag"] = jnp.int32(0)
+    return out
 
 
 #: Dense-era [J, W] bytes/element (masks + int32 late-binding
@@ -238,7 +275,7 @@ def sweep_grid(
     simulated task count (for tasks/sec accounting).
     """
     name = scheduler.lower()
-    runtime.get_rule(name)  # fail fast on unknown schedulers
+    rule = runtime.get_rule(name)  # fail fast on unknown schedulers
 
     def point(sub, jsub, seed):
         tk = dataclasses.replace(tasks, submit=sub, job_submit=jsub)
@@ -246,7 +283,7 @@ def sweep_grid(
             name, cfg, tk, seed, num_rounds,
             match_fn=match_fn, pick_fn=pick_fn,
         )
-        return point_summary(state, tk)
+        return point_summary(state, tk, has_queues=rule.has_queues)
 
     grid = jax.jit(
         jax.vmap(                     # loads
@@ -342,14 +379,14 @@ def fault_sweep_grid(
     ``point_summary`` fields stacked to ``[F, S]`` arrays (``lost`` counts
     the in-flight tasks crashes destroyed per point)."""
     name = scheduler.lower()
-    runtime.get_rule(name)  # fail fast on unknown schedulers
+    rule = runtime.get_rule(name)  # fail fast on unknown schedulers
 
     def point(fs, seed):
         state = runtime.simulate_fixed(
             name, cfg, tasks, seed, num_rounds,
             match_fn=match_fn, pick_fn=pick_fn, faults=fs,
         )
-        return point_summary(state, tasks)
+        return point_summary(state, tasks, has_queues=rule.has_queues)
 
     grid = jax.jit(
         jax.vmap(                     # fault severities

@@ -1,0 +1,265 @@
+"""In-scan telemetry for the simx matrix: per-round time series inside jit.
+
+The paper's thesis is not just lower job delay — Megha buys fast decisions
+with *eventual consistency*, paying in inconsistency-repair traffic and
+messaging overhead that the other architectures pay as probe/queue
+waiting.  Terminal p50/p95 numbers can't show those mechanisms at work;
+this module makes them observable without leaving the compiled program:
+
+  * ``TelemetryConfig`` — static knobs: the decimation ``stride`` (one
+    series sample per ``stride`` rounds) and the fixed-bin delay-histogram
+    shape.  Hashable, so it is safe as a closure/static argument.
+  * ``Timeline`` — the collected pytree: a time axis ``t[K]``, a dict of
+    ``[K]`` series (per-window counter deltas + end-of-window gauges), and
+    the in-jit job-delay histogram ``delay_hist[B]``.  Carried memory is
+    O(rounds / stride + bins) by construction — the inner per-round scan
+    emits scalars that are summed per window before they ever stack.
+  * ``scan_rounds_telemetry`` — the decimated nested-scan driver: an outer
+    ``lax.scan`` over ``num_rounds // stride`` windows, each window an
+    inner scan of ``stride`` telemetry-enabled round steps (built by
+    ``runtime.compose_step(..., telemetry=True)``, which returns
+    ``(state, counters)`` per round).  Fully traceable: a sweep can vmap
+    it over seeds/loads like any other ``simulate_fixed`` call.
+  * ``to_chrome_trace`` — serialize a ``Timeline`` to the Chrome trace
+    event format (counter events, ``"ph": "C"``), viewable in
+    ``chrome://tracing`` / Perfetto; ``bench_simx.py --trace`` drives it.
+
+The round-step contract (see ``runtime.compose_step``): a rule's dispatch
+MAY return a ``"telemetry"`` key — a dict of per-round int32 scalar
+counters (``launches`` expected of every rule, plus rule-specific extras:
+megha ``view_repairs``, eagle ``sss_rejections``, pigeon
+``reserve_hits``) — and the runtime adds the per-round deltas of the
+shared ``CoreState`` counters (messages, probes, inconsistencies, lost,
+and the reservation-queue health counters for ``QueueState`` rules).
+With telemetry disabled the key is never built and the step compiles to
+exactly today's program — final states are pinned bitwise-identical by
+``tests/test_simx_telemetry.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.simx import runtime
+from repro.simx.faults import FaultSchedule, worker_dead
+from repro.simx.state import SimxConfig, TaskArrays
+
+
+@dataclass(frozen=True)
+class TelemetryConfig:
+    """Static telemetry parameters (hashable: safe to close over / pass as
+    a jit static argument).
+
+    ``stride`` decimates the series: one sample per ``stride`` rounds —
+    counter keys hold the *sum over the window*, gauge keys the value at
+    the window's end.  ``delay_bins`` x ``delay_max`` shape the in-jit
+    job-delay histogram (bin width ``delay_max / delay_bins``; delays past
+    ``delay_max`` clamp into the last bin, unfinished jobs are excluded).
+    """
+
+    stride: int = 8
+    delay_bins: int = 32
+    delay_max: float = 60.0
+
+    def __post_init__(self) -> None:
+        if self.stride < 1:
+            raise ValueError("telemetry stride must be >= 1")
+        if self.delay_bins < 1:
+            raise ValueError("delay_bins must be >= 1")
+
+    @property
+    def bin_width(self) -> float:
+        return self.delay_max / self.delay_bins
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class Timeline:
+    """One simulation's collected telemetry (a pytree: vmapped sweeps
+    stack a leading grid axis onto every leaf).
+
+    ``series`` keys split into *counters* (per-window sums of per-round
+    deltas: ``launches``, ``messages``, ``probes``, ``inconsistencies``,
+    ``lost``, rule extras, and — for reservation-queue rules —
+    ``res_overflow`` / ``probe_lag``) and *gauges* sampled at each
+    window's end (``utilization`` in [0, 1], ``pending`` / ``running`` /
+    ``completed`` task counts, ``queue_depth`` = jobs with pending work,
+    ``live_workers``).  ``t[k]`` is the simulated time at the END of
+    window k; window k covers rounds ``[k * stride, (k+1) * stride)``.
+    A trailing partial window (``num_rounds % stride`` rounds) advances
+    the state but is not sampled — cumulative totals still appear in the
+    final state's counters.
+    """
+
+    t: jax.Array                   # float32[K] — simulated time per sample
+    series: dict                   # str -> [K] array (counters + gauges)
+    delay_hist: jax.Array          # int32[B] — finished-job delay histogram
+    stride: int = dataclasses.field(metadata=dict(static=True), default=1)
+    dt: float = dataclasses.field(metadata=dict(static=True), default=0.05)
+    delay_max: float = dataclasses.field(metadata=dict(static=True), default=60.0)
+
+    @property
+    def num_samples(self) -> int:
+        return int(self.t.shape[-1])
+
+    @property
+    def bin_edges(self) -> np.ndarray:
+        """float64[B + 1] — delay-histogram bin edges (last bin clamps)."""
+        b = self.delay_hist.shape[-1]
+        return np.linspace(0.0, self.delay_max, b + 1)
+
+    def to_chrome_trace(
+        self, pid: int = 1, process_name: Optional[str] = None
+    ) -> dict:
+        """Serialize to the Chrome trace event format: one counter track
+        (``"ph": "C"``) per series key, timestamps in microseconds of
+        simulated time.  The returned dict dumps straight to a JSON file
+        loadable in ``chrome://tracing`` / Perfetto (object format, a
+        ``traceEvents`` list)."""
+        ts = np.asarray(self.t, np.float64) * 1e6          # sim-seconds -> us
+        events: list[dict] = []
+        if process_name is not None:
+            events.append({
+                "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                "args": {"name": process_name},
+            })
+        for key in sorted(self.series):
+            vals = np.asarray(self.series[key], np.float64)
+            for k in range(vals.shape[-1]):
+                events.append({
+                    "name": key, "ph": "C", "pid": pid, "tid": 0,
+                    "ts": float(ts[k]), "args": {key: float(vals[k])},
+                })
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+# ---------------------------------------------------------------------------
+# shared gauges + the delay histogram (all in-jit)
+# ---------------------------------------------------------------------------
+
+
+def default_sample_fn(
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    faults: Optional[FaultSchedule] = None,
+) -> Callable:
+    """Build the gauge sampler the decimated scan runs at each window end:
+    the scheduler-independent observables every rule shares, derived from
+    the carried state alone (no per-round bookkeeping needed).  With
+    ``faults``, dead workers are excluded from utilization and counted
+    out of ``live_workers``."""
+    W = cfg.num_workers
+    J = tasks.num_jobs
+
+    def sample(s) -> dict:
+        busy = s.worker_finish > s.t                       # bool[W]
+        if faults is not None:
+            dead = worker_dead(faults, s.t)
+            busy = busy & ~dead                            # down != working
+            live = jnp.int32(W) - jnp.sum(dead, dtype=jnp.int32)
+        else:
+            live = jnp.int32(W)
+        done = s.task_finish <= s.t
+        launched = ~jnp.isinf(s.task_finish)
+        pend = ~launched & (tasks.submit <= s.t)           # arrived, unlaunched
+        pend_job = jnp.zeros(J, jnp.bool_).at[tasks.job].max(pend)
+        return {
+            "utilization": jnp.sum(busy, dtype=jnp.float32) / jnp.float32(W),
+            "pending": jnp.sum(pend, dtype=jnp.int32),
+            "running": jnp.sum(launched & ~done, dtype=jnp.int32),
+            "completed": jnp.sum(done, dtype=jnp.int32),
+            "queue_depth": jnp.sum(pend_job, dtype=jnp.int32),
+            "live_workers": live,
+        }
+
+    return sample
+
+
+def delay_histogram(
+    task_finish: jax.Array, t: jax.Array, tasks: TaskArrays, tel: TelemetryConfig
+) -> jax.Array:
+    """int32[delay_bins] — fixed-bin histogram of finished-job delays
+    (Eq. 2, via the runtime's shared reduction), computed in-jit from the
+    final state.  Delays are recorded at completion and never change, so
+    one end-of-run binning matches an in-scan accumulation exactly; delays
+    past ``delay_max`` clamp into the last bin, unfinished jobs drop."""
+    delays, _ = runtime.job_delays_from_state(task_finish, t, tasks)
+    b = tel.delay_bins
+    idx = jnp.floor(delays / tel.bin_width).astype(jnp.int32)
+    idx = jnp.where(jnp.isfinite(delays), jnp.clip(idx, 0, b - 1), b)
+    return jnp.zeros(b, jnp.int32).at[idx].add(1, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# the decimated nested-scan driver
+# ---------------------------------------------------------------------------
+
+
+def advance_plain(step: Callable, state, num_rounds: int):
+    """Advance a telemetry-enabled step (returns ``(state, counters)``)
+    ``num_rounds`` rounds, discarding the counters — the trailing
+    partial-window / exact-``max_rounds`` path."""
+    state, _ = jax.lax.scan(
+        lambda s, _: (step(s)[0], None), state, None, length=num_rounds
+    )
+    return state
+
+
+def scan_blocks(
+    step: Callable, state, num_blocks: int, stride: int, sample_fn: Callable
+):
+    """The decimation core: ``num_blocks`` windows of ``stride`` rounds
+    each under one outer ``lax.scan``.  Per window, the inner scan's
+    per-round counter dicts are tree-summed to one scalar per key (so the
+    stacked ``ys`` are O(num_blocks), never O(rounds)), then the gauges
+    are sampled from the window-end state.  Returns ``(state, series)``
+    with ``series`` a dict of ``[num_blocks]`` arrays including ``"t"``."""
+
+    def block(s, _):
+        s, counters = jax.lax.scan(
+            lambda s2, __: step(s2), s, None, length=stride
+        )
+        out = jax.tree.map(lambda v: jnp.sum(v, axis=0), counters)
+        out.update(sample_fn(s))
+        out["t"] = s.t
+        return s, out
+
+    return jax.lax.scan(block, state, None, length=num_blocks)
+
+
+def scan_rounds_telemetry(
+    step: Callable,
+    state,
+    num_rounds: int,
+    tel: TelemetryConfig,
+    cfg: SimxConfig,
+    tasks: TaskArrays,
+    faults: Optional[FaultSchedule] = None,
+) -> tuple:
+    """Telemetry counterpart of ``runtime.scan_rounds``: advance ``state``
+    exactly ``num_rounds`` rounds collecting the decimated series, then
+    bin the final job delays.  ``step`` must be telemetry-enabled
+    (``compose_step(..., telemetry=True)``).  Returns
+    ``(state, Timeline)`` — fully traceable, so sweeps vmap it."""
+    K = num_rounds // tel.stride
+    rem = num_rounds - K * tel.stride
+    sample_fn = default_sample_fn(cfg, tasks, faults)
+    state, series = scan_blocks(step, state, K, tel.stride, sample_fn)
+    if rem:
+        state = advance_plain(step, state, rem)
+    t_axis = series.pop("t")
+    hist = delay_histogram(state.task_finish, state.t, tasks, tel)
+    return state, Timeline(
+        t=t_axis,
+        series=series,
+        delay_hist=hist,
+        stride=tel.stride,
+        dt=cfg.dt,
+        delay_max=tel.delay_max,
+    )
