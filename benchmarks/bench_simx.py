@@ -54,6 +54,16 @@ Two sections:
    Perfetto) plus one bench row per rule carrying the control-plane
    overhead counters.
 
+6. **Steady-state rows** (``--steady``; ``--only-steady`` is the CI
+   smoke entrypoint) — the streaming engine (``repro.simx.stream``)
+   driven open-loop: per scheduler, sketch-estimated p99/p999 JCT-delay
+   tail and exact busy-seconds utilization at each offered load (Poisson
+   arrivals through the ring-buffer window), plus one overload ->
+   recovery transient (``PhasedArrivals`` bursting past capacity)
+   recording the peak pending backlog and that it drains.  The smoke tier
+   runs megha / sparrow / oracle; ``--full`` runs every registered rule
+   at more loads.  Recipe and how to read the rows: docs/steady_state.md.
+
 Every invocation also merges its rows into ``BENCH_simx.json`` — a JSON
 array keyed by (git rev, bench name), the machine-readable trajectory
 that makes speed/overhead regressions diffable across PRs (disable with
@@ -469,10 +479,92 @@ def _trace_rows(trace_out: str = "simx_trace.json") -> list[str]:
     return rows
 
 
+#: Section 6: the steady-state streaming grid (smoke / --full tiers).
+STEADY = dict(
+    num_workers=256, loads=(0.5, 0.9), schedulers=("megha", "sparrow", "oracle"),
+    num_jobs=96, tasks_per_job=8, window_jobs=80, window_tasks=640,
+    rounds_per_refill=16,
+)
+STEADY_FULL = dict(
+    num_workers=1024, loads=(0.3, 0.6, 0.9), schedulers=None,  # all rules
+    num_jobs=512, tasks_per_job=16, window_jobs=160, window_tasks=2560,
+    rounds_per_refill=32,
+)
+
+
+def _steady_rows(full: bool = False) -> list[str]:
+    """Section 6 (``--steady``): stream open-loop Poisson arrivals through
+    the ring-buffer window at each offered load and report the in-jit
+    sketch's p99/p999 delay estimates + exact busy-seconds utilization,
+    then drive one overload -> recovery transient per scheduler (a burst
+    at 4x the feasible arrival rate, then feasible again) and record the
+    peak pending backlog and that it fully drains."""
+    from repro.simx.stream import run_steady_state
+    from repro.workload.synth import PhasedArrivals, PoissonArrivals
+    from repro.workload.synth import fixed_job_factory
+
+    spec = STEADY_FULL if full else STEADY
+    schedulers = spec["schedulers"] or list(sxe.SCHEDULERS)
+    factory = fixed_job_factory(spec["tasks_per_job"], 1.0)
+    demand = float(spec["tasks_per_job"])  # resource-seconds per job, exact
+    kw = dict(
+        window_jobs=spec["window_jobs"], window_tasks=spec["window_tasks"],
+        rounds_per_refill=spec["rounds_per_refill"], seed=0,
+    )
+    rows = []
+    for sched in schedulers:
+        t0 = time.time()
+        derived: dict = {}
+        done = total = 0
+        for load in spec["loads"]:
+            rate = load * spec["num_workers"] / demand
+            run = run_steady_state(
+                sched,
+                PoissonArrivals(rate=rate, job_factory=factory, seed=7,
+                                num_jobs=spec["num_jobs"]),
+                spec["num_workers"], **kw,
+            )
+            done += run.tasks_completed
+            total += run.tasks_admitted
+            tag = f"l{load:g}"
+            derived[f"p99_{tag}"] = round(run.quantile(0.99), 3)
+            derived[f"p999_{tag}"] = round(run.quantile(0.999), 3)
+            derived[f"util_{tag}"] = round(run.mean_utilization, 4)
+        # overload -> recovery transient: burst at 2x capacity, then recover
+        feasible = 0.5 * spec["num_workers"] / demand
+        burst_jobs = spec["num_jobs"] // 2
+        run = run_steady_state(
+            sched,
+            PhasedArrivals(
+                [(burst_jobs / (4 * feasible), feasible),
+                 (burst_jobs / (4 * feasible), 4 * feasible),
+                 (burst_jobs / feasible, feasible)],
+                job_factory=factory, seed=7, num_jobs=burst_jobs,
+            ),
+            spec["num_workers"], **kw,
+        )
+        done += run.tasks_completed
+        total += run.tasks_admitted
+        wall = time.time() - t0
+        assert run.tasks_completed == run.tasks_admitted, "backlog must drain"
+        derived.update(
+            burst_pending_peak=int(run.series["pending"].max()),
+            burst_p999=round(run.quantile(0.999), 3),
+            state_kb=round(run.state_bytes / 1024, 1),
+            wall_s=round(wall, 2),
+            done=f"{done}/{total}",
+        )
+        rows.append(_record(
+            f"simx_steady_{sched}", wall * 1e6 / max(total, 1), **derived
+        ))
+    return rows
+
+
 def run(
     full: bool = False,
     faults: bool = False,
     trace: bool = False,
+    steady: bool = False,
     trace_out: str = "simx_trace.json",
     bench_json: str | None = "BENCH_simx.json",
 ) -> list[str]:
@@ -513,6 +605,8 @@ def run(
         rows.extend(_fault_rows(full))
     if trace:
         rows.extend(_trace_rows(trace_out))
+    if steady:
+        rows.extend(_steady_rows(full))
     if bench_json:
         write_bench_json(_BENCH_ROWS, bench_json)
     return rows
@@ -538,6 +632,12 @@ if __name__ == "__main__":
     ap.add_argument("--only-trace", action="store_true",
                     help="print just the telemetry trace rows (the CI "
                          "telemetry smoke entrypoint)")
+    ap.add_argument("--steady", action="store_true",
+                    help="add the steady-state streaming rows (tail "
+                         "latency vs offered load + overload transient)")
+    ap.add_argument("--only-steady", action="store_true",
+                    help="print just the steady-state rows (the CI "
+                         "streaming smoke entrypoint)")
     ap.add_argument("--trace-out", default="simx_trace.json",
                     help="Chrome-trace JSON output path (default "
                          "simx_trace.json)")
@@ -554,9 +654,12 @@ if __name__ == "__main__":
         out = _oracle_gap_row()
     elif args.only_trace:
         out = _trace_rows(args.trace_out)
+    elif args.only_steady:
+        out = _steady_rows(args.full)
     else:
         out = run(full=args.full, faults=args.faults, trace=args.trace,
-                  trace_out=args.trace_out, bench_json=None)
+                  steady=args.steady, trace_out=args.trace_out,
+                  bench_json=None)
     if bench_json:
         write_bench_json(_BENCH_ROWS, bench_json)
     for r in out:

@@ -43,7 +43,9 @@ blocking behind a short task already running on its assigned worker.
 
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +59,7 @@ from repro.simx.faults import (
 )
 from repro.simx.runtime import MatchFn, default_match_fn
 from repro.simx.sparrow import (
+    ProbeLayout,
     build_probe_edges,
     compact_queues,
     insert_probes,
@@ -82,6 +85,29 @@ def eagle_probe_mask(key: jax.Array, cfg: SimxConfig, tasks: TaskArrays) -> jax.
     return probe_mask(key, cfg, tasks) & short[:, None]
 
 
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class EagleLayout:
+    """Traced per-window layout for the streaming engine: the short-path
+    probe edges (see ``sparrow.ProbeLayout``; long jobs get no edges) plus
+    eagle's extras — per-job SSS re-route rotations (host-sampled per
+    *global* job id at admission, so carried jobs keep their re-route
+    targets across refills) and the central long FIFO.  ``long_fifo``
+    lists the window's long task ids in submit order padded with the
+    window sentinel ``T``; ``n_long`` (traced — it changes per refill)
+    clamps the central head; ``long_window`` is the static central match
+    window CL the fifo was padded for.  In streaming mode the SSS and
+    central-match stages are always compiled in (a window may gain long
+    jobs at any refill)."""
+
+    probes: ProbeLayout
+    off1: jax.Array       # int32[J]
+    off2: jax.Array       # int32[J]
+    long_fifo: jax.Array  # int32[T_cap + long_window]
+    n_long: jax.Array     # int32[]
+    long_window: int = dataclasses.field(metadata=dict(static=True))
+
+
 def make_eagle_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
@@ -90,6 +116,7 @@ def make_eagle_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    layout: Optional[EagleLayout] = None,
 ) -> Callable[[EagleState], EagleState]:
     """Build the jittable one-round transition function.
 
@@ -123,13 +150,26 @@ def make_eagle_step(
     T = tasks.num_tasks
     J = tasks.num_jobs
     R = cfg.short_reserved
-    k1, k2, k3 = jax.random.split(key, 3)
-    edge_job, edge_worker, edge_end, P, C = build_probe_edges(
-        k1, cfg, tasks, short_only=True
-    )
-    # per-job re-route rotations: stage 1 anywhere, stage 2 short partition
-    off1 = jax.random.randint(k2, (J,), 0, W, jnp.int32)
-    off2 = jax.random.randint(k3, (J,), 0, R, jnp.int32)
+    if layout is None:
+        k1, k2, k3 = jax.random.split(key, 3)
+        edge_job, edge_worker, edge_end, P, C = build_probe_edges(
+            k1, cfg, tasks, short_only=True
+        )
+        # per-job re-route rotations: stage 1 anywhere, stage 2 short part.
+        off1 = jax.random.randint(k2, (J,), 0, W, jnp.int32)
+        off2 = jax.random.randint(k3, (J,), 0, R, jnp.int32)
+    else:
+        if faults is not None:
+            raise NotImplementedError(
+                "streaming layout does not compose with fault schedules"
+            )
+        edge_job, edge_worker, edge_end = (
+            layout.probes.edge_job,
+            layout.probes.edge_worker,
+            layout.probes.edge_end,
+        )
+        C = layout.probes.window
+        off1, off2 = layout.off1, layout.off2
     short_job = tasks.job_est < cfg.long_threshold              # bool[J]
     long_task = jnp.concatenate(
         [~short_job[tasks.job], jnp.zeros(1, jnp.bool_)]
@@ -143,12 +183,24 @@ def make_eagle_step(
         [jnp.zeros(1, jnp.int32), jnp.cumsum(tasks.job_ntasks, dtype=jnp.int32)[:-1]]
     )
     # central FIFO: long task ids in submit (== task id) order, + CL sentinels
-    long_ids = np.nonzero(np.asarray(tasks.job_est)[np.asarray(tasks.job)] >= cfg.long_threshold)[0]
-    NL = int(long_ids.size)
-    CL = min(max(NL, 1), max(W - R, 64))
-    long_fifo = jnp.asarray(
-        np.concatenate([long_ids, np.full(CL, T)]).astype(np.int32)
-    )
+    if layout is None:
+        long_ids = np.nonzero(np.asarray(tasks.job_est)[np.asarray(tasks.job)] >= cfg.long_threshold)[0]
+        NL = int(long_ids.size)
+        CL = min(max(NL, 1), max(W - R, 64))
+        long_fifo = jnp.asarray(
+            np.concatenate([long_ids, np.full(CL, T)]).astype(np.int32)
+        )
+        use_sss = bool(NL) or faults is not None
+        use_central = bool(NL)
+        nl_clamp = NL
+    else:
+        long_fifo = layout.long_fifo
+        CL = layout.long_window
+        # a refill may bring long jobs into any window: both long-path
+        # stages stay compiled in, clamped by the traced real count
+        use_sss = True
+        use_central = True
+        nl_clamp = layout.n_long
     submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
     if faults is not None:
         # task -> central-FIFO position for crash-loss head rollback
@@ -184,7 +236,7 @@ def make_eagle_step(
         win_j, win_w, lead, ins, lagged = probe_window_slice(
             edge_job, edge_worker, s.probe_head, C, job_submit_pad, t
         )
-        if NL or faults is not None:
+        if use_sss:
             if faults is not None:
                 # SSS also bounces probes off dead workers (the RPC times out)
                 sss_reject = long_here | worker_dead(faults, t)
@@ -256,7 +308,7 @@ def make_eagle_step(
         )
 
         # -- 4. central scheduler: queued long window -> free long partition
-        if NL:
+        if use_central:
             wtask = jax.lax.dynamic_slice(long_fifo, (long_head,), (CL,))
             wsub = submit_pad[jnp.minimum(wtask, T)]
             wsub = jnp.where(wtask >= T, jnp.inf, wsub)
@@ -279,7 +331,9 @@ def make_eagle_step(
             # advance the head past the launched prefix
             fpad2 = rt.finish_pad(task_finish)
             launched2 = rt.window_launched(fpad2, wtask, T)
-            long_head = jnp.minimum(long_head + rt.launched_lead(launched2), NL)
+            long_head = jnp.minimum(
+                long_head + rt.launched_lead(launched2), nl_clamp
+            )
 
         upd = dict(
             task_finish=task_finish,

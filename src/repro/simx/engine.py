@@ -107,6 +107,25 @@ the round-synchronous engine only observes them at round boundaries, so
 An *empty* schedule is bit-identical to the fault-free program (pinned by
 ``tests/test_simx_faults.py``).
 
+Streaming-window addendum (``repro.simx.stream``): the drivers here run a
+fully materialized trace; ``run_steady_state`` instead streams an
+open-loop arrival process through a fixed-capacity ring-buffer window
+(``layout=`` on each rule's step builder), refilled on the host between
+jitted segments.  Two semantic deltas on top of the contract above:
+
+  * **Capacity-bound admission** — a job enters the window when a slot
+    frees, not at its submit time; it keeps its *original* submit time,
+    so slot-wait accrues as queuing delay (overload is measured, not
+    dropped), but probe/arrival messages are counted at admission.
+  * **Refill-granularity retirement** — a completed job occupies its
+    slots until the next ``rounds_per_refill`` boundary, so the window's
+    effective capacity shrinks by up to one segment's completions.
+
+Within a segment the round dynamics are the fixed path's, pinned by
+``tests/test_simx_streaming.py`` (bitwise for megha/pigeon/oracle;
+distribution-level for sparrow/eagle, whose probe targets are
+host-sampled per global job id).  Recipe: docs/steady_state.md.
+
 What this buys: the entire simulation is one compiled program — a Fig. 2
 sweep point at 50k workers is a ``scan`` over dense ``[G, W]`` arrays, and a
 whole (seed x load) grid runs as one ``vmap`` (``repro.simx.sweep``), with
@@ -119,6 +138,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -176,6 +196,19 @@ def make_chunk_runner(step: Callable, chunk: int = 256) -> Callable:
     return jax.jit(run)
 
 
+@partial(jax.jit, static_argnums=(0, 2))
+def _run_tail(step: Callable, state, n: int):
+    """Jitted remainder runner for ``run_to_completion``'s final partial
+    chunk: advance exactly ``n < chunk`` rounds with the done probe reduced
+    in-jit, mirroring ``make_chunk_runner``.  Cached on (step identity, n),
+    so repeated runs with the same step (sweep loops, the bench harness)
+    pay one extra compile per distinct tail length instead of falling off
+    the fast path every call (``tests/test_simx_streaming.py`` pins the
+    jitted tail bitwise against the eager ``scan_rounds`` it replaced)."""
+    state = scan_rounds(step, state, n)
+    return state, jnp.all(state.task_finish <= state.t)
+
+
 def run_to_completion(
     step: Callable,
     state,
@@ -191,9 +224,10 @@ def run_to_completion(
     amortize compilation across runs; it MUST advance exactly ``chunk``
     rounds per call — pass the same chunk to both.
 
-    ``max_rounds`` is exact: a final partial chunk runs un-jitted so the
-    state never advances past the budget (this is what makes an ``until``
-    horizon cap precise)."""
+    ``max_rounds`` is exact: a final partial chunk runs through the jitted
+    remainder runner (``_run_tail``), so the state never advances past the
+    budget (this is what makes an ``until`` horizon cap precise) and a
+    near-boundary budget stays on the compiled fast path."""
     run_chunk = runner if runner is not None else make_chunk_runner(step, chunk)
     rounds = 0
     while rounds < max_rounds:
@@ -201,8 +235,7 @@ def run_to_completion(
         if n == chunk:
             state, done = run_chunk(state)
         else:
-            state = scan_rounds(step, state, n)
-            done = jnp.all(state.task_finish <= state.t)
+            state, done = _run_tail(step, state, n)
         rounds += n
         if bool(done):
             break

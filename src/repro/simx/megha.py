@@ -26,7 +26,9 @@ One round advances the whole datacenter by ``cfg.dt`` simulated seconds:
 
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +71,26 @@ def gm_orders(key: jax.Array, cfg: SimxConfig) -> jax.Array:
     return jnp.stack(rows)
 
 
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MeghaLayout:
+    """Traced per-window task layout for the streaming engine.
+
+    The fixed path bakes the per-GM FIFO layout into the step as numpy
+    closure constants; the streaming engine instead passes the layout as
+    *traced* arrays so one compiled step serves every refilled window.
+    ``gm_tasks`` rows list each GM's window-task ids in submit order
+    (GM = global job id % G, so a carried job keeps its GM across
+    refills), padded with the window sentinel ``T``; ``gm_len`` holds the
+    real row lengths for the head clamp.  ``window`` is the static match
+    window C the rows were padded for.
+    """
+
+    gm_tasks: jax.Array  # int32[G, tg_cap + window]
+    gm_len: jax.Array    # int32[G]
+    window: int = dataclasses.field(metadata=dict(static=True))
+
+
 def make_megha_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
@@ -76,6 +98,7 @@ def make_megha_step(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    layout: Optional[MeghaLayout] = None,
 ) -> Callable[[MeghaState], MeghaState]:
     """Build the jittable one-round transition function.
 
@@ -125,19 +148,29 @@ def make_megha_step(
     # rows of int_ord partition [0, W): flattening gives a W-permutation
     inv_int = jnp.argsort(int_ord.reshape(-1))         # int32[W] -> flat (g,i)
     lm_int = int_ord // wpl                            # int32[G,wi]
-    # compact per-GM task partition (jobs round-robin over GMs)
-    task_gm = np.asarray(tasks.job) % G
-    tg = max(1, int(np.max(np.bincount(task_gm, minlength=G))))
-    C = cfg.match_window or max(W // G, 64)
-    C = min(C, tg)
-    # pad with C sentinels so the head window never slices out of bounds
-    gm_tasks_np = np.full((G, tg + C), T, np.int32)
-    task_pos_np = np.zeros(T + 1, np.int32)            # task -> window position
-    for g in range(G):
-        mine = np.nonzero(task_gm == g)[0]
-        gm_tasks_np[g, : mine.size] = mine
-        task_pos_np[mine] = np.arange(mine.size, dtype=np.int32)
-    gm_tasks = jnp.asarray(gm_tasks_np)                # int32[G,Tg+C]
+    if layout is None:
+        # compact per-GM task partition (jobs round-robin over GMs)
+        task_gm = np.asarray(tasks.job) % G
+        tg = max(1, int(np.max(np.bincount(task_gm, minlength=G))))
+        C = cfg.match_window or max(W // G, 64)
+        C = min(C, tg)
+        # pad with C sentinels so the head window never slices out of bounds
+        gm_tasks_np = np.full((G, tg + C), T, np.int32)
+        task_pos_np = np.zeros(T + 1, np.int32)        # task -> window position
+        for g in range(G):
+            mine = np.nonzero(task_gm == g)[0]
+            gm_tasks_np[g, : mine.size] = mine
+            task_pos_np[mine] = np.arange(mine.size, dtype=np.int32)
+        gm_tasks = jnp.asarray(gm_tasks_np)            # int32[G,Tg+C]
+        gm_len = tg
+    else:
+        if faults is not None:
+            raise NotImplementedError(
+                "streaming layout does not compose with fault schedules"
+            )
+        gm_tasks = layout.gm_tasks
+        C = layout.window
+        gm_len = layout.gm_len
     if faults is not None:
         # task -> (gm row, FIFO position) for crash-loss head rollback;
         # the T pad rows route to the out-of-bounds row G (scatter-dropped)
@@ -342,7 +375,7 @@ def make_megha_step(
         # -- 5. advance each GM's FIFO head past its launched prefix --------
         fpad3 = rt.finish_pad(task_finish)
         launched3 = rt.window_launched(fpad3, wtask, T)            # bool[G,C]
-        head = jnp.minimum(head0 + rt.launched_lead(launched3), tg)
+        head = jnp.minimum(head0 + rt.launched_lead(launched3), gm_len)
 
         upd = dict(
             task_finish=task_finish,

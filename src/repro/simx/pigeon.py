@@ -31,7 +31,8 @@ never migrates, so it queues even when other groups have idle workers.
 
 from __future__ import annotations
 
-from typing import Callable
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,12 +61,33 @@ def task_groups(cfg: SimxConfig, tasks: TaskArrays) -> np.ndarray:
     return out
 
 
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PigeonLayout:
+    """Traced per-window FIFO layout for the streaming engine.
+
+    Rows list each group's window-task ids per priority class in submit
+    order (the group assignment comes from the *persistent* host-side
+    distributor round-robin counters, so a refill never re-distributes a
+    task), padded with the window sentinel ``T`` — both fifos are padded
+    by the static window C = max(S, 1).  ``len_high``/``len_low`` hold
+    the real per-group row lengths for the head clamps (traced: they
+    change every refill).
+    """
+
+    high_fifo: jax.Array  # int32[NG, Lh_cap + C]
+    low_fifo: jax.Array   # int32[NG, Ll_cap + C]
+    len_high: jax.Array   # int32[NG]
+    len_low: jax.Array    # int32[NG]
+
+
 def make_pigeon_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    layout: Optional[PigeonLayout] = None,
 ) -> Callable[[PigeonState], PigeonState]:
     """Build the jittable one-round transition function.
 
@@ -103,26 +125,34 @@ def make_pigeon_step(
         rsv_np[g, : min(cfg.reserved_per_group, sizes[g])] = True
     wg = jnp.asarray(wg_np, jnp.int32)
     reserved = jnp.asarray(rsv_np)
-    # -- exact static task -> group distribution, split by priority class
-    gt = task_groups(cfg, tasks)
-    high_task = np.asarray(tasks.job_est)[np.asarray(tasks.job)] < cfg.long_threshold
     C = max(S, 1)  # window width: a group launches at most S tasks per round
+    if layout is None:
+        # -- exact static task -> group distribution, split by priority class
+        gt = task_groups(cfg, tasks)
+        high_task = np.asarray(tasks.job_est)[np.asarray(tasks.job)] < cfg.long_threshold
 
-    task_pos_np = np.zeros(T + 1, np.int32)  # task -> position in its FIFO
+        task_pos_np = np.zeros(T + 1, np.int32)  # task -> position in its FIFO
 
-    def layout(mask: np.ndarray) -> jax.Array:
-        length = int(np.max(np.bincount(gt[mask], minlength=NG))) if mask.any() else 0
-        rows = np.full((NG, length + C), T, np.int32)
-        for g in range(NG):
-            mine = np.nonzero(mask & (gt == g))[0]
-            rows[g, : mine.size] = mine
-            task_pos_np[mine] = np.arange(mine.size, dtype=np.int32)
-        return jnp.asarray(rows)
+        def class_layout(mask: np.ndarray) -> jax.Array:
+            length = int(np.max(np.bincount(gt[mask], minlength=NG))) if mask.any() else 0
+            rows = np.full((NG, length + C), T, np.int32)
+            for g in range(NG):
+                mine = np.nonzero(mask & (gt == g))[0]
+                rows[g, : mine.size] = mine
+                task_pos_np[mine] = np.arange(mine.size, dtype=np.int32)
+            return jnp.asarray(rows)
 
-    high_fifo = layout(high_task)      # int32[NG, Lh+C], ids ascending = FIFO
-    low_fifo = layout(~high_task)      # int32[NG, Ll+C]
-    len_h = high_fifo.shape[1] - C
-    len_l = low_fifo.shape[1] - C
+        high_fifo = class_layout(high_task)  # int32[NG, Lh+C], ascending = FIFO
+        low_fifo = class_layout(~high_task)  # int32[NG, Ll+C]
+        len_h = high_fifo.shape[1] - C
+        len_l = low_fifo.shape[1] - C
+    else:
+        if faults is not None:
+            raise NotImplementedError(
+                "streaming layout does not compose with fault schedules"
+            )
+        high_fifo, low_fifo = layout.high_fifo, layout.low_fifo
+        len_h, len_l = layout.len_high, layout.len_low
     submit_pad = jnp.concatenate([tasks.submit, jnp.float32([jnp.inf])])
     dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])
     if faults is not None:

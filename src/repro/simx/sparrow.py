@@ -39,7 +39,9 @@ liveness.
 
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -309,6 +311,29 @@ def queue_head_pick(
     return jnp.where(jnp.any(picked, axis=1), head, num_jobs)
 
 
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class ProbeLayout:
+    """Traced per-window probe edge list for the streaming engine.
+
+    The fixed path samples the probe targets once and bakes the edge list
+    into the step as closure constants; the streaming engine passes them
+    as *traced* arrays so one compiled step serves every refilled window.
+    Targets are host-sampled per *global* job id at admission, so a job
+    carried across refills keeps the same probed workers.  Pad edges past
+    the window's real edge count carry ``edge_job == J`` (the pad job
+    never "arrives", so the ready prefix — and with it the probe/message
+    counters — stays exact); ``edge_end`` of jobs without probes (and of
+    the pad job slot) points past every real edge.  ``window`` is the
+    static insertion width C the lists were padded for.
+    """
+
+    edge_job: jax.Array     # int32[P_cap + window]
+    edge_worker: jax.Array  # int32[P_cap + window]
+    edge_end: jax.Array     # int32[J]
+    window: int = dataclasses.field(metadata=dict(static=True))
+
+
 def make_sparrow_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
@@ -316,6 +341,7 @@ def make_sparrow_step(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    layout: Optional[ProbeLayout] = None,
 ) -> Callable[[SparrowState], SparrowState]:
     """Build the jittable one-round transition function.
 
@@ -337,7 +363,17 @@ def make_sparrow_step(
     W = cfg.num_workers
     T = tasks.num_tasks
     J = tasks.num_jobs
-    edge_job, edge_worker, edge_end, P, C = build_probe_edges(key, cfg, tasks)
+    if layout is None:
+        edge_job, edge_worker, edge_end, P, C = build_probe_edges(key, cfg, tasks)
+    else:
+        if faults is not None:
+            raise NotImplementedError(
+                "streaming layout does not compose with fault schedules"
+            )
+        edge_job, edge_worker, edge_end = (
+            layout.edge_job, layout.edge_worker, layout.edge_end,
+        )
+        C = layout.window
     job_submit_pad = jnp.concatenate([tasks.job_submit, jnp.float32([jnp.inf])])
     j_idx = jnp.arange(J, dtype=jnp.int32)
     dur_pad = jnp.concatenate([tasks.duration, jnp.float32([0.0])])

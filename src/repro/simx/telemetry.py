@@ -34,6 +34,20 @@ and the reservation-queue health counters for ``QueueState`` rules).
 With telemetry disabled the key is never built and the step compiles to
 exactly today's program — final states are pinned bitwise-identical by
 ``tests/test_simx_telemetry.py``.
+
+**Streaming quantile sketches** (the steady-state engine,
+``repro.simx.stream``): a drain-to-empty run can afford one terminal
+``jnp.sort`` over the ``[J]`` delay vector, but a steady-state run retires
+jobs continuously and must never materialize all delays at once.
+``QuantileSketch`` is a fixed-state P² sketch (Jain & Chlamtac 1985, one
+5-marker cell per target quantile, vmap-shaped ``[Q, 5]`` state) updated
+in-jit per retired job: O(Q) memory independent of how many delays it has
+absorbed.  Error contract: the P² estimate tracks the *rank* of the true
+quantile — for >= 1000 absorbed samples from a continuous distribution,
+the empirical CDF evaluated at the estimate is within +-0.05 of the
+target quantile (pinned as a hypothesis property in
+``tests/test_simx_streaming.py``); with fewer than 5 samples the sketch
+falls back to exact order statistics of its warm-up buffer.
 """
 
 from __future__ import annotations
@@ -194,6 +208,170 @@ def delay_histogram(
     idx = jnp.floor(delays / tel.bin_width).astype(jnp.int32)
     idx = jnp.where(jnp.isfinite(delays), jnp.clip(idx, 0, b - 1), b)
     return jnp.zeros(b, jnp.int32).at[idx].add(1, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# streaming quantile sketch (P², in-jit, fixed state)
+# ---------------------------------------------------------------------------
+
+#: default steady-state reporting quantiles (median + the tail family)
+DEFAULT_QUANTILES = (0.5, 0.95, 0.99, 0.999)
+
+#: marker-fraction template: desired marker positions after n observations
+#: are ``1 + (n - 1) * frac`` with frac = [0, p/2, p, (1 + p)/2, 1]
+def _marker_fracs(targets: tuple) -> np.ndarray:
+    p = np.asarray(targets, np.float32)[:, None]
+    return np.concatenate(
+        [np.zeros_like(p), p / 2, p, (1 + p) / 2, np.ones_like(p)], axis=1
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class QuantileSketch:
+    """P² streaming quantile state: one 5-marker cell per target quantile.
+
+    Memory is O(len(targets)) — independent of how many observations have
+    been absorbed — and every update is a fixed-shape in-jit step, so the
+    sketch rides inside ``lax.scan`` segments and vmaps like any pytree.
+    The first 5 observations fill ``buf`` (exact order statistics); the
+    5th bootstraps the markers, after which the classic P² marker-
+    adjustment recursion runs (parabolic prediction, linear fallback,
+    integer marker positions with the gap >= 1 invariant, so none of the
+    divided differences can hit a zero denominator).
+    """
+
+    q: jax.Array        # float32[Q, 5] — marker heights
+    n: jax.Array        # float32[Q, 5] — integer marker positions (1-based)
+    npd: jax.Array      # float32[Q, 5] — desired marker positions
+    dn: jax.Array       # float32[Q, 5] — per-observation desired increment
+    buf: jax.Array      # float32[5]    — warm-up buffer (first 5 samples)
+    count: jax.Array    # int32[]       — observations absorbed
+    targets: tuple = dataclasses.field(
+        metadata=dict(static=True), default=DEFAULT_QUANTILES
+    )
+
+
+def sketch_init(targets: tuple = DEFAULT_QUANTILES) -> QuantileSketch:
+    """A fresh sketch for ``targets`` (a static tuple of quantiles in
+    (0, 1)).  Marker positions start at their bootstrap values so the
+    update recursion is well-defined (no zero gaps) even while the
+    warm-up buffer is still filling."""
+    if not targets or min(targets) <= 0.0 or max(targets) >= 1.0:
+        raise ValueError("quantile targets must lie strictly in (0, 1)")
+    fr = _marker_fracs(tuple(targets))
+    qn = fr.shape[0]
+    return QuantileSketch(
+        q=jnp.zeros((qn, 5), jnp.float32),
+        n=jnp.broadcast_to(jnp.arange(1.0, 6.0, dtype=jnp.float32), (qn, 5)),
+        npd=jnp.asarray(1.0 + 4.0 * fr, jnp.float32),
+        dn=jnp.asarray(fr, jnp.float32),
+        buf=jnp.zeros(5, jnp.float32),
+        count=jnp.int32(0),
+        targets=tuple(targets),
+    )
+
+
+def _p2_markers(q, n, npd, dn, x):
+    """One classic P² marker-adjustment step for observation ``x`` on
+    already-bootstrapped ``[Q, 5]`` marker state."""
+    q = q.at[:, 0].min(x)                                  # new minimum
+    q = q.at[:, 4].max(x)                                  # new maximum
+    # cell index k in [0, 3]: number of markers <= x, shifted/clipped
+    k = jnp.clip(jnp.sum(q <= x, axis=1) - 1, 0, 3)        # int[Q]
+    n = n + (jnp.arange(5)[None, :] > k[:, None])          # shift suffix
+    npd = npd + dn
+    # adjust the three interior markers in order (the sequential sweep is
+    # part of the algorithm: marker i's move sees i-1's updated position)
+    for i in (1, 2, 3):
+        d = npd[:, i] - n[:, i]
+        gap_up = n[:, i + 1] - n[:, i]
+        gap_dn = n[:, i - 1] - n[:, i]
+        move = jnp.where(
+            (d >= 1.0) & (gap_up > 1.0), 1.0,
+            jnp.where((d <= -1.0) & (gap_dn < -1.0), -1.0, 0.0),
+        )
+        qi, qu, ql = q[:, i], q[:, i + 1], q[:, i - 1]
+        ni, nu, nl = n[:, i], n[:, i + 1], n[:, i - 1]
+        q_par = qi + move / (nu - nl) * (
+            (ni - nl + move) * (qu - qi) / (nu - ni)
+            + (nu - ni - move) * (qi - ql) / (ni - nl)
+        )
+        q_lin = qi + move * jnp.where(
+            move >= 0.0, (qu - qi) / (nu - ni), (ql - qi) / (nl - ni)
+        )
+        q_new = jnp.where(
+            move != 0.0,
+            jnp.where((ql < q_par) & (q_par < qu), q_par, q_lin),
+            qi,
+        )
+        q = q.at[:, i].set(q_new)
+        n = n.at[:, i].set(ni + move)
+    return q, n, npd
+
+
+def sketch_update(sk: QuantileSketch, x: jax.Array, valid) -> QuantileSketch:
+    """Absorb one observation ``x`` (a float scalar) when ``valid``; with
+    ``valid`` false the state passes through untouched (so masked batch
+    updates compose under ``lax.scan``)."""
+    x = jnp.asarray(x, jnp.float32)
+    cnt = sk.count
+    buf = jnp.where(cnt < 5, sk.buf.at[jnp.clip(cnt, 0, 4)].set(x), sk.buf)
+    # bootstrap (exactly at the 5th observation): sorted buffer -> markers
+    boot_q = jnp.broadcast_to(jnp.sort(buf), sk.q.shape)
+    # steady update (safe pre-bootstrap: positions init at 1..5, no 0 gaps)
+    q2, n2, npd2 = _p2_markers(sk.q, sk.n, sk.npd, sk.dn, x)
+    is_boot = cnt == 4
+    is_run = cnt >= 5
+    new = QuantileSketch(
+        q=jnp.where(is_boot, boot_q, jnp.where(is_run, q2, sk.q)),
+        n=jnp.where(is_run, n2, sk.n),
+        npd=jnp.where(is_run, npd2, sk.npd),
+        dn=sk.dn,
+        buf=buf,
+        count=cnt + 1,
+        targets=sk.targets,
+    )
+    valid = jnp.asarray(valid)
+    merged = jax.tree.map(
+        lambda a, b: jnp.where(valid, a, b),
+        (new.q, new.n, new.npd, new.buf, new.count),
+        (sk.q, sk.n, sk.npd, sk.buf, sk.count),
+    )
+    return QuantileSketch(
+        q=merged[0], n=merged[1], npd=merged[2], dn=sk.dn,
+        buf=merged[3], count=merged[4], targets=sk.targets,
+    )
+
+
+def sketch_absorb(
+    sk: QuantileSketch, values: jax.Array, mask: jax.Array
+) -> QuantileSketch:
+    """Absorb a batch: ``values[i]`` is observed iff ``mask[i]`` — the
+    per-segment bulk update (``lax.scan`` over the batch, fixed state)."""
+    values = jnp.asarray(values, jnp.float32)
+
+    def body(s, xv):
+        x, v = xv
+        return sketch_update(s, x, v), None
+
+    sk, _ = jax.lax.scan(body, sk, (values, jnp.asarray(mask)))
+    return sk
+
+
+def sketch_quantiles(sk: QuantileSketch) -> jax.Array:
+    """float32[Q] — the current quantile estimates (P² center markers;
+    exact order statistics of the warm-up buffer below 5 observations;
+    NaN with zero observations)."""
+    cnt = sk.count
+    p = jnp.asarray(sk.targets, jnp.float32)
+    # small-sample path: nearest-rank on the sorted valid prefix of buf
+    pad = jnp.where(jnp.arange(5) < cnt, sk.buf, jnp.inf)
+    small = jnp.sort(pad)[
+        jnp.clip(jnp.round(p * (cnt - 1)).astype(jnp.int32), 0, 4)
+    ]
+    est = jnp.where(cnt >= 5, sk.q[:, 2], small)
+    return jnp.where(cnt > 0, est, jnp.nan)
 
 
 # ---------------------------------------------------------------------------

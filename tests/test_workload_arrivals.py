@@ -1,0 +1,180 @@
+"""Deterministic coverage for the workload layer's contracts: arrival
+processes (stream shape invariants, restartability), ``synthetic_trace`` /
+``downsampled`` trace-shape invariants, ``FaultPlan`` validation edges,
+and the ``RunMetrics.overhead_summary()`` column contract.  (The
+statistical properties of the arrival generators live in the
+hypothesis-guarded ``test_arrival_properties``.)
+"""
+
+import itertools
+import math
+
+import pytest
+
+from repro.core.metrics import JobRecord, RunMetrics, TaskRecord
+from repro.simx.faults import FaultPlan, GmOutage, WorkerFailure
+from repro.workload.synth import (
+    DiurnalArrivals,
+    MMPPArrivals,
+    PhasedArrivals,
+    PoissonArrivals,
+    ReplayArrivals,
+    bimodal_job_factory,
+    downsampled,
+    synthetic_trace,
+)
+
+PROCESSES = [
+    PoissonArrivals(rate=3.0, seed=5),
+    MMPPArrivals(rates=(2.0, 20.0), dwell=(20.0, 5.0), seed=5),
+    DiurnalArrivals(base_rate=4.0, amplitude=0.5, period=30.0, seed=5),
+    PhasedArrivals([(10.0, 2.0), (5.0, 20.0), (20.0, 2.0)], seed=5),
+    PhasedArrivals([(10.0, 2.0), (5.0, 20.0)], cycle=True, seed=5),
+]
+IDS = [p.name + ("_cyc" if getattr(p, "cycle", False) else "") for p in PROCESSES]
+
+
+@pytest.mark.parametrize("proc", PROCESSES, ids=IDS)
+def test_stream_shape_invariants(proc):
+    """Strictly increasing submit times, contiguous ids from 0, positive
+    finite durations — the window admission layer relies on all three."""
+    jobs = list(itertools.islice(proc.jobs(), 200))
+    assert len(jobs) == 200
+    prev = -math.inf
+    for i, j in enumerate(jobs):
+        assert j.job_id == i
+        assert j.submit_time > prev
+        prev = j.submit_time
+        assert len(j.durations) >= 1
+        assert all(0.0 < d < math.inf for d in j.durations)
+
+
+@pytest.mark.parametrize("proc", PROCESSES, ids=IDS)
+def test_stream_restartable(proc):
+    """``jobs()`` restarts the stream from scratch: two iterations yield
+    identical jobs, bit-for-bit (the refill loop's contract)."""
+    a = list(itertools.islice(proc.jobs(), 64))
+    b = list(itertools.islice(proc.jobs(), 64))
+    assert [(j.submit_time, tuple(j.durations)) for j in a] == [
+        (j.submit_time, tuple(j.durations)) for j in b
+    ]
+
+
+def test_num_jobs_bounds_the_stream():
+    proc = PoissonArrivals(rate=3.0, seed=5, num_jobs=17)
+    assert len(list(proc.jobs())) == 17
+
+
+def test_offered_load_fixed_shapes_exact():
+    """With deterministic job shapes the offered load is exact:
+    rate * tasks_per_job * duration / W."""
+    proc = PoissonArrivals(rate=2.0, seed=0)  # default: 16 x 1.0s tasks
+    assert proc.offered_load(num_workers=64) == pytest.approx(2.0 * 16 / 64)
+
+
+def test_bimodal_factory_mixture():
+    """The bimodal factory reproduces the documented short/long mixture
+    (deterministic given the rng stream the demand estimator uses)."""
+    proc = PoissonArrivals(
+        rate=1.0, job_factory=bimodal_job_factory(tasks_per_job=4), seed=9,
+        num_jobs=400,
+    )
+    longs = sum(
+        1 for j in proc.jobs() if max(j.durations) > 10.0
+    )
+    assert 0.03 < longs / 400 < 0.25  # ~10% long jobs
+
+
+def test_replay_preserves_trace():
+    wl = synthetic_trace(num_jobs=20, tasks_per_job=4, load=0.5,
+                         num_workers=64, seed=2)
+    jobs = list(ReplayArrivals(wl).jobs())
+    src = wl.sorted_jobs()
+    assert [j.submit_time for j in jobs] == [j.submit_time for j in src]
+    assert [list(j.durations) for j in jobs] == [list(j.durations) for j in src]
+    assert [j.job_id for j in jobs] == list(range(20))
+
+
+def test_arrival_process_validation():
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate=0.0)
+    with pytest.raises(ValueError):
+        MMPPArrivals(rates=(1.0,), dwell=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        DiurnalArrivals(base_rate=1.0, amplitude=1.0)
+    with pytest.raises(ValueError):
+        PhasedArrivals([(0.0, 1.0)])
+
+
+# ---------------------------------------------------------------------------
+# fixed-trace generators
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_trace_shape_invariants():
+    wl = synthetic_trace(num_jobs=50, tasks_per_job=8, task_duration=1.0,
+                         load=0.8, num_workers=128, seed=4)
+    jobs = wl.sorted_jobs()
+    assert len(jobs) == 50 and wl.num_tasks == 400
+    assert all(
+        a.submit_time <= b.submit_time for a, b in zip(jobs, jobs[1:])
+    )
+    assert all(d == 1.0 for j in jobs for d in j.durations)
+
+
+def test_downsampled_preserves_mixture():
+    """``downsampled`` keeps every ``factor``-th job with a prefix of its
+    durations — so the duration mixture survives the thinning — and
+    redraws strictly increasing arrivals."""
+    wl = synthetic_trace(num_jobs=60, tasks_per_job=10, load=0.8,
+                         num_workers=128, seed=4)
+    ds = downsampled(wl, factor=10, seed=3)
+    src = wl.sorted_jobs()
+    out = ds.sorted_jobs()
+    assert len(out) == 6
+    for k, j in enumerate(out):
+        orig = src[k * 10]
+        n = max(1, len(orig.durations) // 10)
+        assert list(j.durations) == list(orig.durations)[:n]
+    assert all(a.submit_time < b.submit_time for a, b in zip(out, out[1:]))
+    capped = downsampled(wl, factor=10, seed=3, max_jobs=3)
+    assert capped.num_jobs == 3
+    fat = downsampled(wl, factor=10, seed=3, thin_tasks=False)
+    assert all(len(j.durations) == 10 for j in fat.sorted_jobs())
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation edges + overhead_summary column contract
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validation_edges():
+    # a well-formed plan validates and compiles
+    plan = FaultPlan(
+        worker_failures=(WorkerFailure(0, 1.0, 2.0), WorkerFailure(3, 0.5)),
+        gm_outages=(GmOutage(1, 0.3, 1.5),),
+    )
+    sched = plan.to_schedule(num_workers=8, num_gms=2, dt=0.05)
+    assert sched is not None
+    # recover == time is a zero-width window, not an error
+    FaultPlan(worker_failures=(WorkerFailure(0, 1.0, 1.0),))._validate()
+    FaultPlan(gm_outages=(GmOutage(0, 1.0, 1.0),))._validate()
+    # the empty plan is valid (and is the documented fault-free identity)
+    FaultPlan()._validate()
+
+
+def test_overhead_summary_column_contract():
+    """The exact column set every consumer (sweep.point_summary parity
+    checks, quickstart tables) reads — adding or renaming a key is a
+    cross-layer break, so pin it."""
+    m = RunMetrics(scheduler="x", workload="y", inconsistencies=3,
+                   messages=10, probes=4)
+    m.tasks = [TaskRecord(0, i, 1.0, 0.0) for i in range(6)]
+    m.jobs = [JobRecord(0, 0.0, 1.0, 6)]
+    out = m.overhead_summary()
+    assert set(out) == {
+        "messages", "probes", "inconsistencies", "inconsistency_rate",
+    }
+    assert out["messages"] == 10 and out["probes"] == 4
+    assert out["inconsistencies"] == 3
+    assert out["inconsistency_rate"] == pytest.approx(3 / 6)
