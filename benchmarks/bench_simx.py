@@ -48,13 +48,22 @@ Two sections:
    that tier); ``--only-bigjob`` prints just these rows.
 
 5. **Telemetry traces** (``--trace``; ``--only-trace`` is the CI smoke
-   entrypoint) — one telemetry-enabled run per registered rule on a
+   entrypoint) — one telemetry+provenance run per registered rule on a
    shared tiny trace, written as a combined Chrome-trace JSON (one
-   counter-track process per rule; load it in ``chrome://tracing`` or
-   Perfetto) plus one bench row per rule carrying the control-plane
-   overhead counters.
+   process per rule: counter tracks from the Timeline PLUS per-task
+   wait/run duration spans from the provenance arrays — load it in
+   ``chrome://tracing`` or Perfetto) plus one bench row per rule
+   carrying the control-plane overhead counters.
 
-6. **Steady-state rows** (``--steady``; ``--only-steady`` is the CI
+6. **Delay breakdown** (``--breakdown``; ``--only-breakdown`` is the CI
+   smoke entrypoint) — the oracle-gap point rerun with the provenance
+   stage on (``repro.simx.provenance``): one row per registered rule
+   splitting its mean job delay into eligible-wait / placement-wait /
+   inconsistency-retry / fault-rework, plus the per-component gap vs the
+   omniscient oracle — *why* each architecture trails the lower bound,
+   not just by how much (recipe: docs/observability.md).
+
+7. **Steady-state rows** (``--steady``; ``--only-steady`` is the CI
    smoke entrypoint) — the streaming engine (``repro.simx.stream``)
    driven open-loop: per scheduler, sketch-estimated p99/p999 JCT-delay
    tail and exact busy-seconds utilization at each offered load (Poisson
@@ -436,9 +445,10 @@ TRACE = dict(num_jobs=16, tasks_per_job=64, load=0.8, num_workers=256, seed=13)
 
 
 def _trace_rows(trace_out: str = "simx_trace.json") -> list[str]:
-    """Section 5 (``--trace``): run every registered rule with telemetry on
-    a shared tiny trace, write the combined Chrome-trace JSON (one
-    counter-track process per rule; loads in ``chrome://tracing`` /
+    """Section 5 (``--trace``): run every registered rule with telemetry +
+    provenance on a shared tiny trace, write the combined Chrome-trace
+    JSON (per rule one process holding the counter tracks AND the
+    per-task wait/run duration spans; loads in ``chrome://tracing`` /
     Perfetto), and record one overhead row per rule."""
     import json
 
@@ -452,7 +462,7 @@ def _trace_rows(trace_out: str = "simx_trace.json") -> list[str]:
     for pid, sched in enumerate(sxe.SCHEDULERS, start=1):
         t0 = time.time()
         run = sxe.simulate_workload(
-            sched, wl, TRACE["num_workers"], telemetry=tel,
+            sched, wl, TRACE["num_workers"], telemetry=tel, provenance=True,
             **(megha_kw if sched == "megha" else {}),
         )
         wall = time.time() - t0
@@ -460,11 +470,18 @@ def _trace_rows(trace_out: str = "simx_trace.json") -> list[str]:
         events.extend(
             tl.to_chrome_trace(pid=pid, process_name=f"simx:{sched}")["traceEvents"]
         )
+        # per-task lifecycle spans on the same pid; the counter trace
+        # already named the process, so drop the duplicate metadata
+        spans = [
+            e for e in run.span_events(pid=pid) if e["name"] != "process_name"
+        ]
+        events.extend(spans)
         series = {k: np.asarray(v) for k, v in tl.series.items()}
         derived = dict(
             wall_s=round(wall, 2),
             samples=tl.num_samples,
             stride=tl.stride,
+            spans=sum(1 for e in spans if e["ph"] == "X"),
             launches=int(series["launches"].sum()),
             messages=int(run.state.messages),
             probes=int(run.state.probes),
@@ -479,7 +496,49 @@ def _trace_rows(trace_out: str = "simx_trace.json") -> list[str]:
     return rows
 
 
-#: Section 6: the steady-state streaming grid (smoke / --full tiers).
+def _breakdown_rows() -> list[str]:
+    """Section 6 (``--breakdown``): the oracle-gap point with the
+    provenance stage on — one row per rule splitting the mean job delay
+    into the four components and attributing the oracle gap to them."""
+    from repro.simx.provenance import COMPONENTS
+
+    megha_kw = dict(num_gms=4, num_lms=4, heartbeat_interval=1.0)
+    results: dict[str, dict] = {}
+    walls: dict[str, float] = {}
+    for sched in sxe.SCHEDULERS:
+        t0 = time.time()
+        results[sched] = sxs.fig2_sweep(
+            sched, provenance=True,
+            **(megha_kw if sched == "megha" else {}), **ORACLE_GAP,
+        )
+        walls[sched] = time.time() - t0
+    oracle = results["oracle"]
+    rows = []
+    for sched in sxe.SCHEDULERS:
+        r = results[sched]
+        derived = dict(
+            wall_s=round(walls[sched], 2),
+            mean=round(float(r["mean"][0, 0]), 3),
+        )
+        for k in COMPONENTS:
+            derived[k] = round(float(r[f"mean_{k}"][0, 0]), 4)
+        if sched != "oracle":
+            derived["gap"] = round(
+                float(r["mean"][0, 0]) - float(oracle["mean"][0, 0]), 3
+            )
+            for k in COMPONENTS:
+                derived[f"gap_{k}"] = round(
+                    float(r[f"mean_{k}"][0, 0])
+                    - float(oracle[f"mean_{k}"][0, 0]),
+                    4,
+                )
+        rows.append(_record(
+            f"simx_breakdown_{sched}", walls[sched] * 1e6, **derived
+        ))
+    return rows
+
+
+#: Section 7: the steady-state streaming grid (smoke / --full tiers).
 STEADY = dict(
     num_workers=256, loads=(0.5, 0.9), schedulers=("megha", "sparrow", "oracle"),
     num_jobs=96, tasks_per_job=8, window_jobs=80, window_tasks=640,
@@ -493,7 +552,7 @@ STEADY_FULL = dict(
 
 
 def _steady_rows(full: bool = False) -> list[str]:
-    """Section 6 (``--steady``): stream open-loop Poisson arrivals through
+    """Section 7 (``--steady``): stream open-loop Poisson arrivals through
     the ring-buffer window at each offered load and report the in-jit
     sketch's p99/p999 delay estimates + exact busy-seconds utilization,
     then drive one overload -> recovery transient per scheduler (a burst
@@ -564,6 +623,7 @@ def run(
     full: bool = False,
     faults: bool = False,
     trace: bool = False,
+    breakdown: bool = False,
     steady: bool = False,
     trace_out: str = "simx_trace.json",
     bench_json: str | None = "BENCH_simx.json",
@@ -605,6 +665,8 @@ def run(
         rows.extend(_fault_rows(full))
     if trace:
         rows.extend(_trace_rows(trace_out))
+    if breakdown:
+        rows.extend(_breakdown_rows())
     if steady:
         rows.extend(_steady_rows(full))
     if bench_json:
@@ -632,6 +694,12 @@ if __name__ == "__main__":
     ap.add_argument("--only-trace", action="store_true",
                     help="print just the telemetry trace rows (the CI "
                          "telemetry smoke entrypoint)")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="add the per-rule delay-decomposition rows "
+                         "(oracle gap attributed to components)")
+    ap.add_argument("--only-breakdown", action="store_true",
+                    help="print just the delay-decomposition rows (the CI "
+                         "provenance smoke entrypoint)")
     ap.add_argument("--steady", action="store_true",
                     help="add the steady-state streaming rows (tail "
                          "latency vs offered load + overload transient)")
@@ -654,12 +722,14 @@ if __name__ == "__main__":
         out = _oracle_gap_row()
     elif args.only_trace:
         out = _trace_rows(args.trace_out)
+    elif args.only_breakdown:
+        out = _breakdown_rows()
     elif args.only_steady:
         out = _steady_rows(args.full)
     else:
         out = run(full=args.full, faults=args.faults, trace=args.trace,
-                  steady=args.steady, trace_out=args.trace_out,
-                  bench_json=None)
+                  breakdown=args.breakdown, steady=args.steady,
+                  trace_out=args.trace_out, bench_json=None)
     if bench_json:
         write_bench_json(_BENCH_ROWS, bench_json)
     for r in out:

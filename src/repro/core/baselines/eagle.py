@@ -16,6 +16,7 @@ Sharing (SSS) and Sticky Batch Probing (paper §2.2.3).
 
 from __future__ import annotations
 
+import math
 import random
 from collections import deque
 from dataclasses import dataclass, field
@@ -101,6 +102,14 @@ class _Worker:
         now = self.sched.loop.now
         tr = js.task_records[ti]
         tr.start_time = now
+        if math.isnan(tr.first_start_time):
+            tr.first_start_time = now
+        tr.placed_worker = self.wid
+        tr.placed_entity = (
+            self.sched.cfg.num_schedulers
+            if long
+            else js.job.job_id % self.sched.cfg.num_schedulers
+        )
         tr.d_queue_worker += max(0.0, queue_wait)
         self.running_long = long
         self.busy = True
@@ -159,6 +168,8 @@ class _CentralScheduler:
         self.sched._register(js)
         for tr in js.task_records.values():
             tr.d_comm += self.sched.hop
+            # the central scheduler considers queued tasks every drain
+            tr.first_attempt_time = self.sched.loop.now
         for ti in list(js.pending):
             js.pending.remove(ti)
             self.queue.append((js, ti))
@@ -219,6 +230,8 @@ class _DistScheduler:
         self.sched._register(js)
         for tr in js.task_records.values():
             tr.d_comm += self.sched.hop
+            # probes go out now: the whole job is under active consideration
+            tr.first_attempt_time = self.sched.loop.now
         cfg = self.sched.cfg
         k = min(cfg.probe_ratio * job.num_tasks, cfg.num_workers)
         # avoid nodes we already believe are running long jobs

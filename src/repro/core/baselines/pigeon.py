@@ -18,6 +18,8 @@
 
 from __future__ import annotations
 
+import math
+
 from collections import deque
 from dataclasses import dataclass
 from typing import Optional
@@ -69,6 +71,9 @@ class _Coordinator:
     def on_task(self, js: JobState, ti: int, high: bool) -> None:
         tr = js.task_records[ti]
         tr.d_comm += self.sched.hop  # distributor -> coordinator hop
+        # the coordinator considers the task from the moment it arrives
+        if math.isnan(tr.first_attempt_time):
+            tr.first_attempt_time = self.sched.loop.now
         if high:
             w = self._take(self.unreserved_free) or self._take(self.reserved_free)
         else:
@@ -98,6 +103,10 @@ class _Coordinator:
 
         def run() -> None:
             tr.start_time = start
+            if math.isnan(tr.first_start_time):
+                tr.first_start_time = start
+            tr.placed_worker = w
+            tr.placed_entity = self.gid
             self.sched.loop.push_at(finish, lambda: self._complete(js, ti, w, finish))
 
         self.sched.loop.push_at(start, run)

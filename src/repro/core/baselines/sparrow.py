@@ -11,6 +11,7 @@ worker-side queuing plus the extra get-task round trip.
 
 from __future__ import annotations
 
+import math
 import random
 from collections import deque
 from dataclasses import dataclass
@@ -66,6 +67,10 @@ class _Worker:
         now = self.sched.loop.now
         tr = js.task_records[ti]
         tr.start_time = now
+        if math.isnan(tr.first_start_time):
+            tr.first_start_time = now
+        tr.placed_worker = self.wid
+        tr.placed_entity = js.job.job_id % self.sched.cfg.num_schedulers
         tr.d_queue_worker = queue_wait
         finish = now + js.job.durations[ti]
         self.sched.loop.push_at(finish, lambda: self._finish(js, ti, finish))
@@ -93,6 +98,8 @@ class _SparrowScheduler:
         self.parent._register(js)
         for tr in js.task_records.values():
             tr.d_comm += self.parent.hop  # client -> scheduler
+            # probes go out now: the whole job is under active consideration
+            tr.first_attempt_time = self.parent.loop.now
         n = job.num_tasks
         d = self.parent.cfg.probe_ratio
         k = min(d * n, self.parent.cfg.num_workers)

@@ -21,6 +21,7 @@ Faithful event-driven implementation of the paper (§3):
 
 from __future__ import annotations
 
+import math
 import random
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
@@ -177,7 +178,12 @@ class LocalManager:
         loop = self.sched.loop
         gm = self.sched.gms[gm_id]
         if gm is not None and m.job_id in gm.jobs:
-            gm.jobs[m.job_id].task_records[m.task_index].start_time = start
+            tr = gm.jobs[m.job_id].task_records[m.task_index]
+            tr.start_time = start
+            if math.isnan(tr.first_start_time):
+                tr.first_start_time = start
+            tr.placed_worker = m.worker
+            tr.placed_entity = gm_id
         finish = start + m.duration
         local = m.worker - self.lm_id * self.cfg.workers_per_lm
         loop.push_at(finish, lambda: self._complete(local, gm_id, m, finish))
@@ -310,6 +316,8 @@ class GlobalManager:
             # scheduler-side queue delay ends now (Eq. 5)
             if tr.d_queue_scheduler == 0.0:
                 tr.d_queue_scheduler = max(0.0, now - js.arrival_time)
+            if math.isnan(tr.first_attempt_time):
+                tr.first_attempt_time = now
             lm = self.cfg.lm_of(w)  # the worker was already popped from the view
             self.inflight.add(w)
             if borrowed:
@@ -359,6 +367,9 @@ class GlobalManager:
                 js.running -= 1
                 tr = js.task_records[m.task_index]
                 tr.d_comm += self.sched.hop  # the inconsistency response hop
+                tr.stale_retries += 1
+                # the proposal + invalid-response round trip was pure waste
+                tr.stale_retry_time += 2 * self.sched.hop
                 self.queue.appendleft((m.job_id, m.task_index))
             self.schedule()
 
@@ -487,5 +498,6 @@ class Megha(Scheduler):
                 continue
             js = gm.jobs[job_id]
             js.running -= 1
+            js.task_records[ti].requeues += 1
             gm.queue.appendleft((job_id, ti))
             gm.schedule()

@@ -27,6 +27,17 @@ class TaskRecord:
     d_comm: float = 0.0
     d_queue_worker: float = 0.0
     d_exec: float = 0.0
+    # Lifecycle provenance (mirror of ``repro.simx.provenance.Provenance``,
+    # with continuous event times instead of round indices).  Schedulers
+    # that never touch a field leave its default, which keeps the record
+    # valid — ``job_delay_decomposition`` treats NaN/zero as "no evidence".
+    first_attempt_time: float = math.nan  # first scheduler attempt
+    first_start_time: float = math.nan    # first launch (pre fault-rework)
+    stale_retry_time: float = 0.0         # time burnt on stale-state retries
+    stale_retries: int = 0
+    requeues: int = 0
+    placed_worker: int = -1
+    placed_entity: int = -1               # scheduling authority of the launch
 
     @property
     def tct(self) -> float:
@@ -124,6 +135,70 @@ class RunMetrics:
             out[f"{name}_p95_delay"] = percentile(d, 95)
             out[f"{name}_mean_delay"] = sum(d) / len(d) if d else math.nan
         return out
+
+
+#: the four provenance components, matching ``repro.simx.provenance.COMPONENTS``
+PROVENANCE_COMPONENTS = (
+    "eligible_wait",
+    "placement_wait",
+    "inconsistency_retry",
+    "fault_rework",
+)
+
+
+def job_delay_decomposition(metrics: RunMetrics) -> dict:
+    """Split each finished job's Eq. 2 delay into the four provenance
+    components — the event-backend mirror of
+    ``repro.simx.provenance.decompose_delays``, using continuous event
+    times where the simx side counts rounds.
+
+    Per job the attribution follows its *critical* (last-finishing) task,
+    ties broken to the highest task index:
+
+      * ``eligible_wait``       — submit -> the critical task's first
+        scheduler attempt, anchored inside [submit, start].
+      * ``inconsistency_retry`` — its accumulated ``stale_retry_time``.
+      * ``fault_rework``        — final start - first start (re-runs).
+      * ``placement_wait``      — the residual (queueing on partial
+        knowledge, probe/worker queues, network hops).
+
+    Retry and rework are clipped into the remaining budget in sequence, so
+    the components telescope exactly to the job delay.  Returns one list
+    per key, aligned with ``metrics.jobs`` (NaN for unfinished jobs)."""
+    by_job: dict[int, list[TaskRecord]] = {}
+    for tr in metrics.tasks:
+        by_job.setdefault(tr.job_id, []).append(tr)
+    out: dict[str, list[float]] = {
+        k: [] for k in ("delays",) + PROVENANCE_COMPONENTS
+    }
+    for j in metrics.jobs:
+        trs = by_job.get(j.job_id, [])
+        if math.isnan(j.finish_time) or not trs:
+            for k in out:
+                out[k].append(math.nan)
+            continue
+        fmax = max(t.finish_time for t in trs)
+        ci = max(
+            (t for t in trs if t.finish_time == fmax),
+            key=lambda t: t.task_index,
+        )
+        d = j.delay
+        start = ci.finish_time - ci.duration
+        submit = ci.submit_time
+        attempt = submit if math.isnan(ci.first_attempt_time) else ci.first_attempt_time
+        anchor = min(max(attempt, submit), max(start, submit))
+        eligible = min(max(anchor - submit, 0.0), d)
+        retry = min(max(ci.stale_retry_time, 0.0), d - eligible)
+        first_start = (
+            start if math.isnan(ci.first_start_time) else ci.first_start_time
+        )
+        rework = min(max(start - first_start, 0.0), d - eligible - retry)
+        out["delays"].append(d)
+        out["eligible_wait"].append(eligible)
+        out["inconsistency_retry"].append(retry)
+        out["fault_rework"].append(rework)
+        out["placement_wait"].append(d - (eligible + retry + rework))
+    return out
 
 
 def percentile(xs: Sequence[float], p: float) -> float:

@@ -116,6 +116,7 @@ def make_eagle_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
     layout: Optional[EagleLayout] = None,
 ) -> Callable[[EagleState], EagleState]:
     """Build the jittable one-round transition function.
@@ -351,9 +352,39 @@ def make_eagle_step(
             upd["telemetry"] = dict(
                 launches=n_launch, sss_rejections=n_rej0 + n_rej1
             )
+        if provenance:
+            # attempt = a scheduler acted on the task's job this round:
+            # short-path probes inserted (or orphan-rescued), or the long
+            # task sat in the central scheduler's queued match window.
+            # Sticky launches are or-ed in by the runtime's launch latch.
+            # authority = the job's home distributed scheduler for short
+            # jobs (job % num_gms), entity ``num_gms`` for the central
+            # long-path scheduler.
+            att_j = (
+                jnp.zeros(J + 1, jnp.bool_)
+                .at[jnp.where(ins, win_j, J)]
+                .set(True, mode="drop")
+            )
+            att_j = att_j.at[:-1].max(orphan)
+            attempt = att_j[:-1][tasks.job]
+            if use_central:
+                attempt = attempt | (
+                    jnp.zeros(T, jnp.bool_)
+                    .at[jnp.where(queued, wtask, T)]
+                    .set(True, mode="drop")
+                )
+            aj = job_pad[jnp.minimum(worker_task, T)]
+            authority = jnp.where(
+                long_task[jnp.minimum(worker_task, T)],
+                jnp.int32(cfg.num_gms),
+                (jnp.minimum(aj, J - 1) % cfg.num_gms).astype(jnp.int32),
+            )
+            upd["provenance"] = dict(attempt=attempt, authority=authority)
         return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
+    return rt.compose_step(
+        cfg, tasks, dispatch, faults, telemetry=telemetry, provenance=provenance
+    )
 
 
 def simulate_fixed(
@@ -382,9 +413,11 @@ def _build_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable[[EagleState], EagleState]:
     return make_eagle_step(
-        cfg, tasks, key, match_fn, pick_fn, faults=faults, telemetry=telemetry
+        cfg, tasks, key, match_fn, pick_fn, faults=faults, telemetry=telemetry,
+        provenance=provenance,
     )
 
 

@@ -150,6 +150,7 @@ from repro.core.megha import grid_workers
 from repro.core.metrics import JobRecord, RunMetrics, TaskRecord, classify_long
 from repro.simx import runtime
 from repro.simx.faults import FaultPlan, FaultSchedule, is_empty
+from repro.simx.provenance import Provenance, init_provenance
 
 # importing the rule modules registers them; canonical (paper) order first,
 # then the oracle baseline — the registry preserves registration order
@@ -189,9 +190,10 @@ def make_chunk_runner(step: Callable, chunk: int = 256) -> Callable:
     chunk (``bench_simx.py`` reports the saved dispatch overhead as the
     ``simx_doneprobe`` row)."""
 
-    def run(s):
-        s = scan_rounds(step, s, chunk)
-        return s, jnp.all(s.task_finish <= s.t)
+    def run(c):
+        c = scan_rounds(step, c, chunk)
+        s = runtime.carry_state(c)
+        return c, jnp.all(s.task_finish <= s.t)
 
     return jax.jit(run)
 
@@ -206,7 +208,8 @@ def _run_tail(step: Callable, state, n: int):
     the fast path every call (``tests/test_simx_streaming.py`` pins the
     jitted tail bitwise against the eager ``scan_rounds`` it replaced)."""
     state = scan_rounds(step, state, n)
-    return state, jnp.all(state.task_finish <= state.t)
+    s = runtime.carry_state(state)
+    return state, jnp.all(s.task_finish <= s.t)
 
 
 def run_to_completion(
@@ -269,9 +272,10 @@ def run_to_completion_telemetry(
     sample_fn = tlm.default_sample_fn(cfg, tasks, faults)
 
     @jax.jit
-    def run_chunk(s):
-        s, series = tlm.scan_blocks(step, s, chunk // stride, stride, sample_fn)
-        return s, series, jnp.all(s.task_finish <= s.t)
+    def run_chunk(c):
+        c, series = tlm.scan_blocks(step, c, chunk // stride, stride, sample_fn)
+        s = runtime.carry_state(c)
+        return c, series, jnp.all(s.task_finish <= s.t)
 
     blocks: list[dict] = []
     rounds = 0
@@ -287,7 +291,8 @@ def run_to_completion_telemetry(
                 blocks.append(series)
             if n - k * stride:
                 state = tlm.advance_plain(step, state, n - k * stride)
-            done = jnp.all(state.task_finish <= state.t)
+            s = runtime.carry_state(state)
+            done = jnp.all(s.task_finish <= s.t)
         rounds += n
         if bool(done):
             break
@@ -299,7 +304,8 @@ def run_to_completion_telemetry(
     else:
         series = {}
     t_axis = series.pop("t", np.zeros(0, np.float32))
-    hist = tlm.delay_histogram(state.task_finish, state.t, tasks, tel)
+    s = runtime.carry_state(state)
+    hist = tlm.delay_histogram(s.task_finish, s.t, tasks, tel)
     timeline = Timeline(
         t=jnp.asarray(t_axis),
         series={k: jnp.asarray(v) for k, v in series.items()},
@@ -334,6 +340,7 @@ class SimxRun:
     tasks: TaskArrays
     state: CoreState
     timeline: Optional[Timeline] = None
+    provenance: Optional[Provenance] = None
 
     @property
     def end_time(self) -> float:
@@ -367,6 +374,39 @@ class SimxRun:
             self.state.task_finish, self.state.t, self.tasks
         )
         return np.asarray(delays, np.float64)
+
+    def delay_decomposition(self) -> dict[str, np.ndarray]:
+        """Per-job delay split into the four provenance components (each
+        float64[J], nan for unfinished jobs), summing exactly to
+        ``job_delays()``.  Requires ``simulate_workload(provenance=True)``."""
+        if self.provenance is None:
+            raise ValueError(
+                "run was built without provenance "
+                "(simulate_workload(..., provenance=True))"
+            )
+        from repro.simx.provenance import decompose_delays
+
+        d = decompose_delays(
+            self.provenance, self.state.task_finish, self.state.t,
+            self.tasks, self.cfg.dt,
+        )
+        return {k: np.asarray(v, np.float64) for k, v in d.items()}
+
+    def span_events(self, pid: int = 1) -> list[dict]:
+        """Chrome trace ``ph: "X"`` duration spans for this run's tasks on
+        per-GM and per-worker tracks (``telemetry.provenance_spans``).
+        Requires ``simulate_workload(provenance=True)``."""
+        if self.provenance is None:
+            raise ValueError(
+                "run was built without provenance "
+                "(simulate_workload(..., provenance=True))"
+            )
+        from repro.simx.telemetry import provenance_spans
+
+        return provenance_spans(
+            self.provenance, self.state, self.tasks, self.cfg,
+            pid=pid, name=self.scheduler,
+        )
 
     def to_run_metrics(self, include_tasks: bool = True) -> RunMetrics:
         """Materialize ``RunMetrics`` records so every event-backend consumer
@@ -465,6 +505,7 @@ def simulate_workload(
     interpret: bool = True,
     faults: FaultSchedule | FaultPlan | None = None,
     telemetry: TelemetryConfig | bool | None = None,
+    provenance: bool = False,
 ) -> SimxRun:
     """Run one (scheduler, workload) simx simulation to completion.
 
@@ -484,6 +525,12 @@ def simulate_workload(
     collects the decimated in-scan series and delay histogram; the run's
     ``Timeline`` lands on ``SimxRun.timeline``.  ``None`` (the default)
     builds today's telemetry-free program bit-for-bit.
+
+    ``provenance=True`` additionally carries the per-task lifecycle arrays
+    (``repro.simx.provenance``) through the scan; the final ``Provenance``
+    lands on ``SimxRun.provenance`` and feeds ``delay_decomposition()`` /
+    ``span_events()``.  Disabled, the program is bit-identical to today's —
+    the same guarantee as the telemetry flag.
     """
     name = scheduler.lower()
     rule = runtime.get_rule(name)
@@ -535,9 +582,11 @@ def simulate_workload(
     # any registered rule builds and runs through the same three calls
     step = rule.build_step(
         cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults,
-        telemetry=telemetry is not None,
+        telemetry=telemetry is not None, provenance=provenance,
     )
     state = rule.init(cfg, tasks)
+    if provenance:
+        state = (state, init_provenance(tasks.num_tasks))
     cap = max_rounds if max_rounds is not None else estimate_rounds(cfg, tasks)
     if max_rounds is None and faults is not None:
         # outages park work until recovery: extend the horizon past the last
@@ -558,6 +607,9 @@ def simulate_workload(
             step, state, telemetry, cfg, tasks,
             faults=faults, chunk=chunk, max_rounds=cap,
         )
+    prov = None
+    if provenance:
+        state, prov = state
     return SimxRun(
         scheduler=name,
         workload_name=workload.name,
@@ -565,4 +617,5 @@ def simulate_workload(
         tasks=tasks,
         state=state,
         timeline=timeline,
+        provenance=prov,
     )

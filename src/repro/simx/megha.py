@@ -98,6 +98,7 @@ def make_megha_step(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
     layout: Optional[MeghaLayout] = None,
 ) -> Callable[[MeghaState], MeghaState]:
     """Build the jittable one-round transition function.
@@ -292,6 +293,21 @@ def make_megha_step(
             # repairs (§3.4.1), accumulated through the borrow cond's carry
             tel_launch = jnp.sum(launch_w, dtype=jnp.int32)
             tel_repair = jnp.sum(inval_gl, dtype=jnp.int32)
+        if provenance:
+            # attempt = every queued task in a GM window (ranked this
+            # round); stale = per-task invalid-proposal increments (the
+            # §3.4 inconsistencies), borrow-phase hits accumulated through
+            # the cond carry like the telemetry scalars
+            prov_attempt = (
+                jnp.zeros(T, jnp.bool_)
+                .at[jnp.where(queued_w, wtask, T)]
+                .set(True, mode="drop")
+            )
+            stale_inc = (
+                jnp.zeros(T, jnp.int32)
+                .at[jnp.where(invalid_i, sel_task_i, T)]
+                .add(1, mode="drop")
+            )
 
         # -- 4. borrow match (full [G, W] pass, only when queues outrun the
         #       internal views) --------------------------------------------
@@ -359,6 +375,13 @@ def make_megha_step(
                     args[10] + jnp.sum(launch, dtype=jnp.int32),
                     args[11] + jnp.sum(inval2_gl, dtype=jnp.int32),
                 )
+            if provenance:
+                out = out + (
+                    args[-1]
+                    + jnp.zeros(T, jnp.int32)
+                    .at[jnp.where(invalid, prop, T)]
+                    .add(1, mode="drop"),
+                )
             return out
 
         carry = (view, truth, task_finish, worker_finish, worker_task,
@@ -366,11 +389,15 @@ def make_megha_step(
                  messages)
         if telemetry:
             carry = carry + (tel_launch, tel_repair)
+        if provenance:
+            carry = carry + (stale_inc,)
         carry = jax.lax.cond(need_borrow, borrow, lambda a: a, carry)
         (view, truth, task_finish, worker_finish, worker_task, worker_gm,
          worker_borrowed, inconsistencies, repartitions, messages) = carry[:10]
         if telemetry:
             tel_launch, tel_repair = carry[10], carry[11]
+        if provenance:
+            stale_inc = carry[-1]
 
         # -- 5. advance each GM's FIFO head past its launched prefix --------
         fpad3 = rt.finish_pad(task_finish)
@@ -393,9 +420,15 @@ def make_megha_step(
             upd["telemetry"] = dict(
                 launches=tel_launch, view_repairs=tel_repair
             )
+        if provenance:
+            upd["provenance"] = dict(
+                attempt=prov_attempt, stale=stale_inc, authority=worker_gm
+            )
         return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
+    return rt.compose_step(
+        cfg, tasks, dispatch, faults, telemetry=telemetry, provenance=provenance
+    )
 
 
 def simulate_fixed(
@@ -424,11 +457,12 @@ def _build_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable[[MeghaState], MeghaState]:
     del pick_fn  # megha has no reservation queues
     return make_megha_step(
         cfg, tasks, gm_orders(key, cfg), match_fn, faults=faults,
-        telemetry=telemetry,
+        telemetry=telemetry, provenance=provenance,
     )
 
 

@@ -46,6 +46,7 @@ def make_oracle_step(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable[[OracleState], OracleState]:
     """Build the jittable one-round transition function.
 
@@ -112,9 +113,23 @@ def make_oracle_step(
         )
         if telemetry:
             upd["telemetry"] = dict(launches=jnp.sum(launch, dtype=jnp.int32))
+        if provenance:
+            # attempt = the whole queued window (every queued task in it
+            # was ranked against the free set); authority = the single
+            # omniscient scheduler, entity 0
+            attempt = (
+                jnp.zeros(T, jnp.bool_)
+                .at[jnp.where(queued, wtask, T)]
+                .set(True, mode="drop")
+            )
+            upd["provenance"] = dict(
+                attempt=attempt, authority=jnp.zeros(W, jnp.int32)
+            )
         return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
+    return rt.compose_step(
+        cfg, tasks, dispatch, faults, telemetry=telemetry, provenance=provenance
+    )
 
 
 def simulate_fixed(
@@ -141,9 +156,13 @@ def _build_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable[[OracleState], OracleState]:
     del key, pick_fn  # deterministic, no reservation queues
-    return make_oracle_step(cfg, tasks, match_fn, faults=faults, telemetry=telemetry)
+    return make_oracle_step(
+        cfg, tasks, match_fn, faults=faults, telemetry=telemetry,
+        provenance=provenance,
+    )
 
 
 RULE = rt.register_rule(

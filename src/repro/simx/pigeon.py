@@ -87,6 +87,7 @@ def make_pigeon_step(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
     layout: Optional[PigeonLayout] = None,
 ) -> Callable[[PigeonState], PigeonState]:
     """Build the jittable one-round transition function.
@@ -125,6 +126,12 @@ def make_pigeon_step(
         rsv_np[g, : min(cfg.reserved_per_group, sizes[g])] = True
     wg = jnp.asarray(wg_np, jnp.int32)
     reserved = jnp.asarray(rsv_np)
+    if provenance:
+        # static worker -> group map (provenance authority track)
+        wgrp_np = np.zeros(W, np.int32)
+        for g in range(NG):
+            wgrp_np[wg_np[g][wg_np[g] < W]] = g
+        worker_group = jnp.asarray(wgrp_np)
     C = max(S, 1)  # window width: a group launches at most S tasks per round
     if layout is None:
         # -- exact static task -> group distribution, split by priority class
@@ -328,9 +335,38 @@ def make_pigeon_step(
                 launches=jnp.sum(launch, dtype=jnp.int32),
                 reserve_hits=jnp.sum(n_high_r, dtype=jnp.int32),
             )
+        if provenance:
+            # attempt = the task sat in its group coordinator's queued
+            # window this round (the submitted prefix — or the explicit
+            # queued mask under fault rollbacks).  authority = the group
+            # coordinator, which is static per worker.
+            col = jnp.arange(C, dtype=jnp.int32)[None, :]
+            if faults is None:
+                att_h = col < qh[:, None]
+                att_l = col < ql[:, None]
+            else:
+                fpad_a = rt.finish_pad(task_finish0)
+                att_h = jnp.isinf(fpad_a[wh]) & (
+                    jnp.where(wh >= T, jnp.inf, submit_pad[jnp.minimum(wh, T)])
+                    <= t
+                )
+                att_l = jnp.isinf(fpad_a[wl]) & (
+                    jnp.where(wl >= T, jnp.inf, submit_pad[jnp.minimum(wl, T)])
+                    <= t
+                )
+            attempt = (
+                jnp.zeros(T, jnp.bool_)
+                .at[jnp.where(att_h, wh, T)]
+                .set(True, mode="drop")
+                .at[jnp.where(att_l, wl, T)]
+                .set(True, mode="drop")
+            )
+            upd["provenance"] = dict(attempt=attempt, authority=worker_group)
         return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
+    return rt.compose_step(
+        cfg, tasks, dispatch, faults, telemetry=telemetry, provenance=provenance
+    )
 
 
 def simulate_fixed(
@@ -358,9 +394,13 @@ def _build_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable[[PigeonState], PigeonState]:
     del key, pick_fn  # static round-robin distribution, no queues
-    return make_pigeon_step(cfg, tasks, match_fn, faults=faults, telemetry=telemetry)
+    return make_pigeon_step(
+        cfg, tasks, match_fn, faults=faults, telemetry=telemetry,
+        provenance=provenance,
+    )
 
 
 RULE = rt.register_rule(

@@ -1,0 +1,239 @@
+"""Delay provenance: per-task lifecycle arrays + in-jit delay decomposition.
+
+The oracle gap (PR 5) prices each architecture's partial knowledge in
+aggregate and the telemetry stage (PR 6) counts events per round, but
+neither can say *why a given job was slow* — stale-state penalty vs.
+worker-queue wait vs. probe/messaging hops vs. fault rework.  This module
+adds that attribution as an optional build-time stage of the shared
+round-stage runtime (``runtime.compose_step(..., provenance=True)``):
+
+  * ``Provenance`` — a dense pytree of per-task lifecycle arrays carried
+    alongside the scheduler state: the rounds at which each task became
+    eligible, was first attempted by its scheduler, was (first/last)
+    launched, and finished, plus counters for fault re-pends and
+    stale-state retries and the placement identity (which scheduling
+    authority placed it, on which worker).  Everything is ``int32[T]``,
+    so the carry grows by O(T) only when the flag is on; disabled
+    provenance builds exactly the pre-provenance program (pinned bitwise
+    by ``tests/test_simx_provenance.py``, like the telemetry flag).
+  * Rule extras — each dispatch stage MAY return a ``"provenance"`` dict
+    (only when built with ``provenance=True``):
+    ``attempt`` bool[T] (tasks the scheduler actively considered this
+    round: in a match window, probes inserted, ...), ``stale`` int32[T]
+    (per-task stale-state retry increments — megha's invalid proposals),
+    ``authority`` int32[W] (the scheduling entity that placed each
+    worker's current task: megha's launching GM, a probe rule's home GM,
+    pigeon's distributor, the oracle's single authority 0).  The runtime
+    derives the launch/finish/requeue transitions itself, so a rule that
+    supplies nothing still gets a correct lifecycle — extras only sharpen
+    attempt/stale/authority attribution.
+  * ``decompose_delays`` — the in-jit reduction splitting every finished
+    job's Eq. 2 delay into **eligible-wait** (submit -> first scheduler
+    attempt of the critical task), **inconsistency-retry** (stale-state
+    retry rounds), **fault-rework** (first-launch -> final-launch of the
+    critical task — re-runs after crash loss), and **placement-wait**
+    (the residual: rounds the attempted-but-unplaced task waited on
+    partial knowledge, plus network hops and round quantization).  The
+    four components sum to ``runtime.job_delays_from_state``'s delay up
+    to float32 rounding (pinned).
+
+Time convention: a fresh state starts at ``t = 0, rnd = 0`` and each
+round advances both, so the simulated time of round ``r`` is exactly
+``r * cfg.dt`` — lifecycle rounds convert to seconds by one multiply.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.simx.state import TaskArrays
+
+#: sentinel for "round not reached yet" / "never placed"
+UNSET = -1
+
+#: the four decomposition components, in reporting order
+COMPONENTS = (
+    "eligible_wait",
+    "placement_wait",
+    "inconsistency_retry",
+    "fault_rework",
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class Provenance:
+    """Per-task lifecycle arrays (all ``int32[T]``; rounds are ``UNSET``
+    until the event happens, placements ``UNSET`` until launched)."""
+
+    first_eligible_round: jax.Array   # submit time crossed the round clock
+    first_attempt_round: jax.Array    # first round the scheduler tried it
+    first_launch_round: jax.Array     # first launch (pre-fault-rework)
+    launch_round: jax.Array           # latest launch (== first w/o faults)
+    finish_round: jax.Array           # round its finish time passed
+    requeue_count: jax.Array          # fault re-pends (crash loss)
+    stale_retry_count: jax.Array      # stale-state retries (megha invalids)
+    placed_gm: jax.Array              # scheduling authority of last launch
+    placed_worker: jax.Array          # worker of last launch
+
+    def replace(self, **kw) -> "Provenance":
+        import dataclasses
+
+        return dataclasses.replace(self, **kw)
+
+
+def init_provenance(num_tasks: int) -> Provenance:
+    """A fresh lifecycle carry for ``num_tasks`` tasks."""
+    unset = jnp.full(num_tasks, UNSET, jnp.int32)
+    zero = jnp.zeros(num_tasks, jnp.int32)
+    return Provenance(
+        first_eligible_round=unset,
+        first_attempt_round=unset,
+        first_launch_round=unset,
+        launch_round=unset,
+        finish_round=unset,
+        requeue_count=zero,
+        stale_retry_count=zero,
+        placed_gm=unset,
+        placed_worker=unset,
+    )
+
+
+def advance_provenance(
+    prov: Provenance,
+    old_state,
+    new_state,
+    task_finish0: jax.Array,
+    tasks: TaskArrays,
+    extras: dict,
+) -> Provenance:
+    """One round's lifecycle transitions, derived by the runtime from the
+    state the dispatch stage already computes (``compose_step`` calls this
+    after folding the updates; rules never touch ``Provenance`` directly).
+
+    ``task_finish0`` is the post-fault pre-dispatch finish array, so a
+    launch is ``pending-at-dispatch -> launched-after``, and a fault
+    re-pend is ``launched-before-faults -> pending-at-dispatch``."""
+    T = tasks.num_tasks
+    rnd = old_state.rnd.astype(jnp.int32)
+    t = old_state.t
+    launched = jnp.isinf(task_finish0) & ~jnp.isinf(new_state.task_finish)
+    requeued = ~jnp.isinf(old_state.task_finish) & jnp.isinf(task_finish0)
+    eligible = tasks.submit <= t
+    attempt = extras.get("attempt")
+    attempt = launched if attempt is None else (attempt | launched)
+
+    def first(old, cond):
+        return jnp.where((old == UNSET) & cond, rnd, old)
+
+    # the round a task's finish time passes the clock — scanned against
+    # the POST-advance time, so a zero-duration launch finishes in-round
+    finished = new_state.task_finish <= new_state.t
+
+    # placement identity: every launched task appears in new worker_task
+    # at exactly its worker, so one [W]-wide scatter recovers (task ->
+    # worker, task -> authority) for this round's launches
+    wt = new_state.worker_task
+    num_workers = wt.shape[0]
+    lw = launched[jnp.minimum(wt, T - 1)] & (wt < T)
+    idx = jnp.where(lw, wt, T)
+    placed_worker = prov.placed_worker.at[idx].set(
+        jnp.arange(num_workers, dtype=jnp.int32), mode="drop"
+    )
+    authority = extras.get("authority")
+    if authority is None:
+        authority = jnp.zeros(num_workers, jnp.int32)
+    placed_gm = prov.placed_gm.at[idx].set(
+        authority.astype(jnp.int32), mode="drop"
+    )
+    stale = extras.get("stale")
+    stale_count = prov.stale_retry_count
+    if stale is not None:
+        stale_count = stale_count + stale.astype(jnp.int32)
+    return Provenance(
+        first_eligible_round=first(prov.first_eligible_round, eligible),
+        first_attempt_round=first(prov.first_attempt_round, attempt),
+        first_launch_round=first(prov.first_launch_round, launched),
+        launch_round=jnp.where(launched, rnd, prov.launch_round),
+        finish_round=first(prov.finish_round, finished),
+        requeue_count=prov.requeue_count + requeued.astype(jnp.int32),
+        stale_retry_count=stale_count,
+        placed_gm=placed_gm,
+        placed_worker=placed_worker,
+    )
+
+
+def critical_tasks(
+    task_finish: jax.Array, t: jax.Array, tasks: TaskArrays
+) -> tuple[jax.Array, jax.Array]:
+    """(cid int32[J], done bool[J]) — per job, the index of the task whose
+    finish defines the job finish (ties break to the highest task index);
+    ``cid`` is ``UNSET`` for unfinished jobs."""
+    from repro.simx import runtime  # runtime <-> provenance cycle guard
+
+    _, job_finish = runtime.job_delays_from_state(task_finish, t, tasks)
+    fin = jnp.where(task_finish <= t, task_finish, jnp.inf)
+    crit = jnp.isfinite(fin) & (fin == job_finish[tasks.job])
+    ids = jnp.where(crit, jnp.arange(tasks.num_tasks, dtype=jnp.int32), UNSET)
+    cid = jnp.full(tasks.num_jobs, UNSET, jnp.int32).at[tasks.job].max(ids)
+    return cid, cid != UNSET
+
+
+def decompose_delays(
+    prov: Provenance,
+    task_finish: jax.Array,
+    t: jax.Array,
+    tasks: TaskArrays,
+    dt: float,
+) -> dict:
+    """Split each finished job's delay into the four components (float32[J]
+    each, NaN for unfinished jobs), summing to the Eq. 2 delay.
+
+    The attribution follows the job's *critical* (last-finishing) task:
+
+      * ``eligible_wait``   — submit -> the critical task's first
+        scheduler attempt (anchored inside [submit, start], so an attempt
+        logged before submit or after launch cannot leak time).
+      * ``inconsistency_retry`` — ``stale_retry_count * dt``: rounds burnt
+        re-proposing against stale state (megha's invalid proposals).
+      * ``fault_rework``    — ``(launch_round - first_launch_round) * dt``:
+        the span between the first and the final launch of a task re-run
+        after crash loss (zero without faults).
+      * ``placement_wait``  — the residual: attempted-but-unplaced rounds
+        (the paper's partial-knowledge queuing cost) plus network hops and
+        round quantization.
+
+    Retry and rework are clipped into the remaining delay budget in
+    sequence, so the components always telescope to the total: the sum
+    equals ``runtime.job_delays_from_state``'s delays up to float32
+    rounding (pinned by ``tests/test_simx_provenance.py``)."""
+    from repro.simx import runtime  # runtime <-> provenance cycle guard
+
+    delays, _ = runtime.job_delays_from_state(task_finish, t, tasks)
+    cid, done = critical_tasks(task_finish, t, tasks)
+    ci = jnp.clip(cid, 0, tasks.num_tasks - 1)
+    submit = tasks.job_submit
+    start = task_finish[ci] - tasks.duration[ci]
+    d = jnp.where(done, delays, 0.0)
+    attempt_t = prov.first_attempt_round[ci].astype(jnp.float32) * dt
+    anchor = jnp.clip(attempt_t, submit, jnp.maximum(start, submit))
+    eligible = jnp.clip(anchor - submit, 0.0, d)
+    retry_raw = prov.stale_retry_count[ci].astype(jnp.float32) * dt
+    retry = jnp.clip(retry_raw, 0.0, d - eligible)
+    rework_raw = (
+        prov.launch_round[ci] - prov.first_launch_round[ci]
+    ).astype(jnp.float32) * dt
+    rework = jnp.clip(rework_raw, 0.0, d - eligible - retry)
+    placement = d - (eligible + retry + rework)
+    nan = jnp.float32(jnp.nan)
+    return {
+        "delays": delays,
+        "eligible_wait": jnp.where(done, eligible, nan),
+        "placement_wait": jnp.where(done, placement, nan),
+        "inconsistency_retry": jnp.where(done, retry, nan),
+        "fault_rework": jnp.where(done, rework, nan),
+        "critical_task": cid,
+    }

@@ -32,8 +32,20 @@ re-implementation of the round machinery (the omniscient oracle in
      (``repro.simx.telemetry``).  Disabled (the default), nothing is
      built and the program is exactly the telemetry-free one (pinned
      bitwise by ``tests/test_simx_telemetry.py``).
-  5. **metrics/advance** — the runtime folds the updates into the carried
+  5. **provenance** (optional, ``compose_step(..., provenance=True)``) —
+     the step's carry becomes ``(state, Provenance)`` and the runtime
+     derives each round's per-task lifecycle transitions (eligible /
+     attempt / launch / finish rounds, fault re-pends, placement
+     identity) from the state delta, folding in the rule's optional
+     ``"provenance"`` extras dict (``attempt`` / ``stale`` /
+     ``authority`` — see ``repro.simx.provenance``).  Disabled (the
+     default), nothing is built — same bitwise guarantee as telemetry
+     (pinned by ``tests/test_simx_provenance.py``).
+  6. **metrics/advance** — the runtime folds the updates into the carried
      state, accumulates the ``lost`` counter, and advances ``t``/``rnd``.
+
+Drivers stay carry-shape agnostic via ``carry_state`` (the state leaf of
+a possibly-tuple carry) — ``scan_rounds`` itself is pytree-generic.
 
 Reporting shares one in-jit reduction too: ``job_delays_from_state`` is
 the single Eq. 2 job-delay computation behind both ``sweep.point_summary``
@@ -217,12 +229,21 @@ TELEMETRY_CORE_COUNTERS = ("messages", "probes", "inconsistencies", "lost")
 TELEMETRY_QUEUE_COUNTERS = ("res_overflow", "probe_lag")
 
 
+def carry_state(carry):
+    """The scheduler state leaf of a scan carry: under provenance the
+    carry is ``(state, Provenance)``, otherwise the state itself.  Purely
+    host-level (the carry's python structure is static), so using it in a
+    driver changes nothing about the compiled program."""
+    return carry[0] if isinstance(carry, tuple) else carry
+
+
 def compose_step(
     cfg: SimxConfig,
     tasks: TaskArrays,
     dispatch: DispatchFn,
     faults: Optional[FaultSchedule] = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable:
     """Assemble one rule's jittable round step from the stage contract:
     ``faults -> complete -> dispatch -> telemetry -> metrics/advance``
@@ -237,10 +258,20 @@ def compose_step(
     ``telemetry=False`` (the default) the step returns the state alone and
     the stage compiles out entirely: nothing telemetry-related is ever
     built, so the program is exactly the pre-telemetry one (final states
-    pinned bitwise by ``tests/test_simx_telemetry.py``)."""
+    pinned bitwise by ``tests/test_simx_telemetry.py``).
+
+    With ``provenance=True`` the carry becomes ``(state, Provenance)``:
+    the runtime pops the rule's optional ``"provenance"`` extras and
+    advances the per-task lifecycle arrays after folding the state
+    updates (``repro.simx.provenance.advance_provenance``).  Disabled,
+    nothing provenance-related is built — the same bitwise compile-out
+    guarantee as the telemetry flag."""
+    from repro.simx.provenance import advance_provenance
+
     T = tasks.num_tasks
 
-    def step(s):
+    def step(carry):
+        s = carry[0] if provenance else carry
         t = s.t
         task_finish0, worker_finish0, lost_w, n_lost = fault_stage(
             faults, t, cfg.dt, s.task_finish, s.worker_finish, s.worker_task, T
@@ -248,18 +279,26 @@ def compose_step(
         free, comp = completion_masks(worker_finish0, t, cfg.dt)
         updates = dispatch(s, t, task_finish0, worker_finish0, free, comp, lost_w)
         tel = updates.pop("telemetry", None)
+        pv = updates.pop("provenance", None)
         if n_lost is not None:
             updates["lost"] = s.lost + n_lost
         new = s.replace(t=t + cfg.dt, rnd=s.rnd + 1, **updates)
+        if provenance:
+            out = (
+                new,
+                advance_provenance(carry[1], s, new, task_finish0, tasks, pv or {}),
+            )
+        else:
+            out = new
         if not telemetry:
-            return new
+            return out
         counters = dict(tel or {})
         for f in TELEMETRY_CORE_COUNTERS:
             counters[f] = getattr(new, f) - getattr(s, f)
         if isinstance(new, QueueState):
             for f in TELEMETRY_QUEUE_COUNTERS:
                 counters[f] = getattr(new, f) - getattr(s, f)
-        return new, counters
+        return out, counters
 
     return step
 
@@ -333,6 +372,7 @@ def simulate_fixed(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry=None,
+    provenance: bool = False,
 ):
     """Run any registered rule exactly ``num_rounds`` rounds from a fresh
     DC — a pure function of ``seed`` (and the ``faults`` leaves), so an
@@ -345,14 +385,22 @@ def simulate_fixed(
     the in-scan telemetry stage: the return value becomes
     ``(state, Timeline)`` — the decimated per-round series plus the
     in-jit delay histogram, still fully traceable/vmappable.  ``None``
-    (the default) builds exactly the telemetry-free program."""
+    (the default) builds exactly the telemetry-free program.
+
+    ``provenance=True`` switches on the lifecycle stage: the returned
+    state becomes the ``(state, Provenance)`` carry (the Timeline, when
+    also enabled, stays the second element of the outer tuple)."""
     rule = get_rule(name)
     key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed
     step = rule.build_step(
         cfg, tasks, key, match_fn=match_fn, pick_fn=pick_fn, faults=faults,
-        telemetry=telemetry is not None,
+        telemetry=telemetry is not None, provenance=provenance,
     )
     state = rule.init(cfg, tasks)
+    if provenance:
+        from repro.simx.provenance import init_provenance
+
+        state = (state, init_provenance(tasks.num_tasks))
     if telemetry is None:
         return scan_rounds(step, state, num_rounds)
     from repro.simx import telemetry as tlm  # runtime <- telemetry cycle guard

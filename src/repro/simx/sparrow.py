@@ -341,6 +341,7 @@ def make_sparrow_step(
     match_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
     layout: Optional[ProbeLayout] = None,
 ) -> Callable[[SparrowState], SparrowState]:
     """Build the jittable one-round transition function.
@@ -450,9 +451,30 @@ def make_sparrow_step(
         )
         if telemetry:
             upd["telemetry"] = dict(launches=jnp.sum(launch, dtype=jnp.int32))
+        if provenance:
+            # attempt = a scheduler acted on the job this round: its probes
+            # were inserted into reservation queues (``ins`` carries the
+            # newly-inserted window prefix) or it was orphan-rescued; the
+            # runtime latches the first such round, and or-s in launches.
+            # authority = the job's home scheduler (jobs hash round-robin
+            # onto the ``num_gms`` stateless Sparrow schedulers).
+            att_j = (
+                jnp.zeros(J + 1, jnp.bool_)
+                .at[jnp.where(ins, win_j, J)]
+                .set(True, mode="drop")
+            )
+            att_j = att_j.at[:-1].max(orphan)
+            authority = (
+                tasks.job[jnp.minimum(worker_task, T - 1)] % cfg.num_gms
+            ).astype(jnp.int32)
+            upd["provenance"] = dict(
+                attempt=att_j[:-1][tasks.job], authority=authority
+            )
         return upd
 
-    return rt.compose_step(cfg, tasks, dispatch, faults, telemetry=telemetry)
+    return rt.compose_step(
+        cfg, tasks, dispatch, faults, telemetry=telemetry, provenance=provenance
+    )
 
 
 def simulate_fixed(
@@ -480,6 +502,7 @@ def _build_step(
     pick_fn: MatchFn | None = None,
     faults: FaultSchedule | None = None,
     telemetry: bool = False,
+    provenance: bool = False,
 ) -> Callable[[SparrowState], SparrowState]:
     # sparrow's only rank-and-select is the [W, R] head-of-queue pick.
     # When both are supplied (the sweep drivers), pick_fn wins — the wide
@@ -489,7 +512,7 @@ def _build_step(
     # to the pick rather than being silently dropped.
     return make_sparrow_step(
         cfg, tasks, key, pick_fn if pick_fn is not None else match_fn,
-        faults=faults, telemetry=telemetry,
+        faults=faults, telemetry=telemetry, provenance=provenance,
     )
 
 

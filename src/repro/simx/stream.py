@@ -104,6 +104,9 @@ class _StreamWindow:
         window_jobs: int,
         window_tasks: int,
         seed: int,
+        provenance: bool = False,
+        breakdown_bins: int = 32,
+        breakdown_max: float = 60.0,
     ):
         if window_jobs < 1 or window_tasks < 1:
             raise ValueError("window capacities must be positive")
@@ -126,6 +129,19 @@ class _StreamWindow:
         self.tasks_retired = 0
         self.retired_delays: list[float] = []
         self._last_t = 0.0  # previous refill boundary (busy accounting)
+        # harvest-at-retirement delay decomposition: bounded host state —
+        # per-component histogram + running sums, never per-job storage
+        self.provenance = bool(provenance)
+        if provenance:
+            from repro.simx.provenance import COMPONENTS
+
+            self.breakdown_bins = int(breakdown_bins)
+            self.breakdown_max = float(breakdown_max)
+            self.prov_hist = {
+                c: np.zeros(self.breakdown_bins, np.int64) for c in COMPONENTS
+            }
+            self.prov_sum = {c: 0.0 for c in COMPONENTS}
+            self.prov_jobs = 0
         self.admit(float("-inf"))
         self._export()
 
@@ -362,13 +378,51 @@ class _StreamWindow:
         holes = np.nonzero(~launched)[0]
         return int(holes[0]) if holes.size else int(length)
 
-    def refill(self, state, collect_delays: bool = True):
+    def _harvest(self, wj: _WinJob, sl: slice, tf: np.ndarray, pv: dict) -> None:
+        """Decompose one retiring job's delay and fold it into the bounded
+        per-component histograms — the host mirror of
+        ``provenance.decompose_delays`` for a single (fully finished) job,
+        run at the only moment its lifecycle rows are about to leave the
+        window.  ``pv`` is the provenance arrays as host numpy."""
+        dt = self.cfg.dt
+        tf_sl = tf[sl]
+        jf = float(tf_sl.max())
+        d = jf - wj.submit - wj.ideal
+        # critical task: highest index achieving the job finish
+        ci = int(sl.start) + int(np.nonzero(tf_sl == tf_sl.max())[0].max())
+        start = float(tf[ci]) - float(self._np["duration"][ci])
+        attempt_t = float(pv["first_attempt_round"][ci]) * dt
+        anchor = np.clip(attempt_t, wj.submit, max(start, wj.submit))
+        eligible = float(np.clip(anchor - wj.submit, 0.0, d))
+        retry = float(np.clip(float(pv["stale_retry_count"][ci]) * dt,
+                              0.0, d - eligible))
+        rework = float(np.clip(
+            float(pv["launch_round"][ci] - pv["first_launch_round"][ci]) * dt,
+            0.0, d - eligible - retry,
+        ))
+        comps = {
+            "eligible_wait": eligible,
+            "placement_wait": d - (eligible + retry + rework),
+            "inconsistency_retry": retry,
+            "fault_rework": rework,
+        }
+        width = self.breakdown_max / self.breakdown_bins
+        for c, v in comps.items():
+            b = int(np.clip(v / width, 0, self.breakdown_bins - 1))
+            self.prov_hist[c][b] += 1
+            self.prov_sum[c] += v
+        self.prov_jobs += 1
+
+    def refill(self, state, collect_delays: bool = True, prov=None):
         """Retire / compact / admit / remap between segments.
 
-        Returns ``(state, stats)`` — ``state`` with every task/job index
-        remapped to the new window and every FIFO head recomputed;
+        Returns ``(state, stats, prov)`` — ``state`` with every task/job
+        index remapped to the new window and every FIFO head recomputed;
         ``stats`` the conservation counts at this boundary (taken BEFORE
-        retirement, over the admitted stream so far).
+        retirement, over the admitted stream so far); ``prov`` the
+        remapped lifecycle arrays (``None`` round-trips).  When ``prov``
+        is given, each retiring job's delay decomposition is harvested
+        into the window's bounded per-component histograms first.
         """
         cfg = self.cfg
         t = float(state.t)
@@ -403,6 +457,17 @@ class _StreamWindow:
         task_map = np.full(self.T_cap + 1, self.T_cap, np.int32)
         job_map = np.full(self.J_cap + 1, self.J_cap, np.int32)
         new_tf = np.full(self.T_cap, np.inf, np.float32)
+        if prov is not None:
+            from repro.simx.provenance import UNSET, Provenance
+
+            fields = [f for f in Provenance.__dataclass_fields__]
+            pv = {f: np.asarray(getattr(prov, f)) for f in fields}
+            new_pv = {
+                f: np.zeros(self.T_cap, np.int32)
+                if f in ("requeue_count", "stale_retry_count")
+                else np.full(self.T_cap, UNSET, np.int32)
+                for f in fields
+            }
         carried: list[_WinJob] = []
         new_probe_head = 0
         k = 0
@@ -416,6 +481,8 @@ class _StreamWindow:
                     self.retired_delays.append(
                         float(tf[sl].max()) - wj.submit - wj.ideal
                     )
+                if prov is not None and self.provenance:
+                    self._harvest(wj, sl, tf, pv)
                 continue
             if old_head is not None:
                 new_probe_head += int(
@@ -424,6 +491,9 @@ class _StreamWindow:
             job_map[p] = len(carried)
             task_map[sl] = np.arange(k, k + n, dtype=np.int32)
             new_tf[k : k + n] = tf[sl]
+            if prov is not None:
+                for f in fields:
+                    new_pv[f][k : k + n] = pv[f][sl]
             carried.append(wj)
             k += n
         self.jobs = carried
@@ -470,7 +540,11 @@ class _StreamWindow:
                         np.int32,
                     )
                 )
-        return state.replace(**upd), stats
+        if prov is not None:
+            prov = prov.replace(
+                **{f: jnp.asarray(v) for f, v in new_pv.items()}
+            )
+        return state.replace(**upd), stats, prov
 
 
 # ---------------------------------------------------------------------------
@@ -479,41 +553,69 @@ class _StreamWindow:
 
 
 def _make_segment(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
-                  match_fn, pick_fn):
+                  match_fn, pick_fn, telemetry: Optional[tlm.TelemetryConfig] = None,
+                  stride: int = 1, provenance: bool = False):
     """One compiled ``num_rounds``-round advance: build the rule's step
     from the *traced* window arrays + layout, scan, absorb the segment's
     completed-job delays into the sketch, and sample the gauges.  Window
     shapes and layout capacities are static, so every refill reuses the
-    one compilation."""
+    one compilation.
+
+    With ``telemetry`` (and ``stride``, which must divide ``num_rounds``)
+    the scan runs through ``telemetry.scan_blocks`` and the segment
+    additionally returns the per-window counter/gauge series — the host
+    concatenates them across refill boundaries into one ``Timeline``.
+    With ``provenance`` the carry is ``(state, Provenance)`` and the
+    lifecycle arrays ride through the scan (remapped by ``refill``)."""
     if match_fn is None:
         match_fn = rt.default_match_fn()
     if pick_fn is None:
         pick_fn = rt.default_match_fn(block_rows=1)
     orders = _megha.gm_orders(key, cfg) if rule == "megha" else None
+    tele = telemetry is not None
+    if tele and num_rounds % stride:
+        raise ValueError("telemetry stride must divide rounds_per_refill")
 
     def build_step(win_tasks, layout):
         if rule == "megha":
             return _megha.make_megha_step(
-                cfg, win_tasks, orders, match_fn, layout=layout
+                cfg, win_tasks, orders, match_fn, layout=layout,
+                telemetry=tele, provenance=provenance,
             )
         if rule == "sparrow":
             return _sparrow.make_sparrow_step(
-                cfg, win_tasks, key, pick_fn, layout=layout
+                cfg, win_tasks, key, pick_fn, layout=layout,
+                telemetry=tele, provenance=provenance,
             )
         if rule == "eagle":
             return _eagle.make_eagle_step(
-                cfg, win_tasks, key, match_fn, pick_fn, layout=layout
+                cfg, win_tasks, key, match_fn, pick_fn, layout=layout,
+                telemetry=tele, provenance=provenance,
             )
         if rule == "pigeon":
-            return _pigeon.make_pigeon_step(cfg, win_tasks, match_fn, layout=layout)
+            return _pigeon.make_pigeon_step(
+                cfg, win_tasks, match_fn, layout=layout,
+                telemetry=tele, provenance=provenance,
+            )
         if rule == "oracle":
-            return _oracle.make_oracle_step(cfg, win_tasks, match_fn)
+            return _oracle.make_oracle_step(
+                cfg, win_tasks, match_fn,
+                telemetry=tele, provenance=provenance,
+            )
         raise ValueError(f"no streaming segment for rule {rule!r}")
 
     @jax.jit
-    def seg(state, win_tasks, layout, sketch):
+    def seg(carry, win_tasks, layout, sketch):
         step = build_step(win_tasks, layout)
-        state = rt.scan_rounds(step, state, num_rounds)
+        if tele:
+            sample_fn = tlm.default_sample_fn(cfg, win_tasks, None)
+            carry, blocks = tlm.scan_blocks(
+                step, carry, num_rounds // stride, stride, sample_fn
+            )
+        else:
+            carry = rt.scan_rounds(step, carry, num_rounds)
+            blocks = ()
+        state = rt.carry_state(carry)
         # jobs completed THIS segment: every refill retires completed jobs,
         # so a finite delay here is new — absorbed exactly once
         delays, _ = rt.job_delays_from_state(state.task_finish, state.t, win_tasks)
@@ -532,19 +634,22 @@ def _make_segment(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
                 dtype=jnp.int32,
             ),
         )
-        return state, sketch, gauges
+        return carry, sketch, gauges, blocks
 
     return seg
 
 
 @functools.lru_cache(maxsize=32)
-def _default_segment(rule: str, cfg: SimxConfig, num_rounds: int):
+def _default_segment(rule: str, cfg: SimxConfig, num_rounds: int,
+                     telemetry: Optional[tlm.TelemetryConfig] = None,
+                     stride: int = 1, provenance: bool = False):
     """Memoized segment for the default match/pick functions: two runs
     with the same (rule, cfg, rounds_per_refill) — a load sweep, a bench
     rerun, the test battery — share one ``jax.jit`` object and therefore
     one compilation (window shapes are traced, so they don't key it)."""
     return _make_segment(
-        rule, cfg, jax.random.PRNGKey(cfg.seed), num_rounds, None, None
+        rule, cfg, jax.random.PRNGKey(cfg.seed), num_rounds, None, None,
+        telemetry=telemetry, stride=stride, provenance=provenance,
     )
 
 
@@ -574,6 +679,8 @@ class SteadyRun:
     rounds: int
     end_time: float
     state_bytes: int                 # carried device state (O(W + window))
+    timeline: Optional[tlm.Timeline] = None   # merged in-scan telemetry
+    breakdown: Optional[dict] = None          # harvested delay decomposition
 
     def quantile(self, q: float) -> float:
         """Sketch estimate for target quantile ``q`` (must be one of
@@ -652,6 +759,10 @@ def run_steady_state(
     num_lms: int = 8,
     dt: float = 0.05,
     seed: int = 0,
+    telemetry: tlm.TelemetryConfig | bool | None = None,
+    provenance: bool = False,
+    breakdown_bins: int = 32,
+    breakdown_max: float = 60.0,
     **cfg_kw,
 ) -> SteadyRun:
     """Stream ``arrivals`` through ``rule`` until the stream drains, the
@@ -669,6 +780,18 @@ def run_steady_state(
     retired job's exact delay on the host — O(completed jobs) HOST
     memory, exact p50/p95 for the parity tests; switch it off for truly
     unbounded runs and read the sketch instead.
+
+    ``telemetry`` (a ``TelemetryConfig``, or ``True`` for the defaults)
+    runs each segment through ``scan_blocks`` and merges the per-segment
+    counter/gauge windows across refill boundaries into one ``Timeline``
+    on ``SteadyRun.timeline`` (Chrome-traceable via ``to_chrome_trace``);
+    the stride is shrunk to the largest divisor of ``rounds_per_refill``
+    so windows never straddle a boundary.  ``provenance=True`` carries the
+    per-task lifecycle arrays through every segment (remapped at refill)
+    and harvests each retiring job's delay decomposition into bounded
+    per-component histograms (``breakdown_bins`` x ``breakdown_max``) on
+    ``SteadyRun.breakdown`` — steady-state attribution without unbounded
+    state.
     """
     name = rule.lower()
     r = rt.get_rule(name)
@@ -679,16 +802,36 @@ def run_steady_state(
             name, num_workers, window_tasks=window_tasks,
             num_gms=num_gms, num_lms=num_lms, dt=dt, seed=seed, **cfg_kw,
         )
-    win = _StreamWindow(arrivals, cfg, name, window_jobs, window_tasks, cfg.seed)
+    if telemetry is True:
+        telemetry = tlm.TelemetryConfig()
+    stride = 1
+    if telemetry is not None:
+        stride = min(telemetry.stride, rounds_per_refill)
+        while rounds_per_refill % stride:
+            stride -= 1
+    win = _StreamWindow(
+        arrivals, cfg, name, window_jobs, window_tasks, cfg.seed,
+        provenance=provenance, breakdown_bins=breakdown_bins,
+        breakdown_max=breakdown_max,
+    )
     win_tasks = win.tasks()
     state = r.init(cfg, win_tasks)
+    prov = None
+    if provenance:
+        from repro.simx.provenance import init_provenance
+
+        prov = init_provenance(win.T_cap)
     sketch = tlm.sketch_init(quantiles)
     if match_fn is None and pick_fn is None:
-        seg = _default_segment(name, cfg, rounds_per_refill)
+        seg = _default_segment(
+            name, cfg, rounds_per_refill,
+            telemetry=telemetry, stride=stride, provenance=provenance,
+        )
     else:
         seg = _make_segment(
             name, cfg, jax.random.PRNGKey(cfg.seed), rounds_per_refill,
             match_fn, pick_fn,
+            telemetry=telemetry, stride=stride, provenance=provenance,
         )
     series: dict[str, list] = {
         k: [] for k in (
@@ -699,12 +842,24 @@ def run_steady_state(
     for q in quantiles:
         series[f"q{q}"] = []
     refills: list[dict] = []
+    tel_blocks: list[dict] = []
     rounds = 0
     while True:
-        state, sketch, gauges = seg(state, win_tasks, win.layout(), sketch)
+        carry = (state, prov) if provenance else state
+        carry, sketch, gauges, blocks = seg(
+            carry, win_tasks, win.layout(), sketch
+        )
+        if provenance:
+            state, prov = carry
+        else:
+            state = carry
+        if telemetry is not None:
+            tel_blocks.append(blocks)
         rounds += rounds_per_refill
         lag = max(0.0, float(state.t) - win.next_submit)
-        state, stats = win.refill(state, collect_delays=collect_delays)
+        state, stats, prov = win.refill(
+            state, collect_delays=collect_delays, prov=prov
+        )
         refills.append(stats)
         series["t"].append(stats["t"])
         series["utilization"].append(float(gauges["utilization"]))
@@ -730,6 +885,42 @@ def run_steady_state(
     in_window_done = int(
         np.sum((np.asarray(win.tasks().job) < win.J_cap - 1) & (tf <= float(state.t)))
     )
+    timeline = None
+    if telemetry is not None and tel_blocks:
+        merged = {
+            key: np.concatenate([np.asarray(b[key]) for b in tel_blocks])
+            for key in tel_blocks[0]
+        }
+        t_axis = merged.pop("t", np.zeros(0, np.float32))
+        # streamed delay histogram: retired jobs live on the host, so the
+        # exact delays (when collected) bin directly; otherwise empty
+        hist = np.zeros(telemetry.delay_bins, np.int32)
+        if collect_delays and win.retired_delays:
+            b = np.clip(
+                (np.asarray(win.retired_delays) / telemetry.bin_width).astype(int),
+                0, telemetry.delay_bins - 1,
+            )
+            hist = np.bincount(b, minlength=telemetry.delay_bins).astype(np.int32)
+        timeline = tlm.Timeline(
+            t=jnp.asarray(t_axis),
+            series={k: jnp.asarray(v) for k, v in merged.items()},
+            delay_hist=jnp.asarray(hist),
+            stride=stride,
+            dt=cfg.dt,
+            delay_max=telemetry.delay_max,
+        )
+    breakdown = None
+    if provenance:
+        n = max(win.prov_jobs, 1)
+        breakdown = {
+            "jobs": win.prov_jobs,
+            "bin_edges": np.linspace(
+                0.0, win.breakdown_max, win.breakdown_bins + 1
+            ),
+            "hist": {c: h.copy() for c, h in win.prov_hist.items()},
+            "sum": dict(win.prov_sum),
+            "mean": {c: s / n for c, s in win.prov_sum.items()},
+        }
     return SteadyRun(
         rule=name,
         cfg=cfg,
@@ -750,4 +941,6 @@ def run_steady_state(
         rounds=rounds,
         end_time=float(state.t),
         state_bytes=state_nbytes(state, win.tasks(), win.layout(), sketch),
+        timeline=timeline,
+        breakdown=breakdown,
     )

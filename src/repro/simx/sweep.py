@@ -85,7 +85,11 @@ SIMULATE_FIXED: Mapping[str, Callable] = _SimulateFixedView()
 
 
 def point_summary(
-    state, tasks: TaskArrays, has_queues: Optional[bool] = None
+    state,
+    tasks: TaskArrays,
+    has_queues: Optional[bool] = None,
+    provenance=None,
+    dt: Optional[float] = None,
 ) -> dict[str, jax.Array]:
     """Reduce one finished state to the Fig. 2 / Fig. 4 observables, inside
     jit: p50/p95 job delay (Eq. 2; nan-excluding unfinished jobs, via the
@@ -106,7 +110,13 @@ def point_summary(
     ``mean_util`` is exact in closed form — each launched task occupied
     its worker for ``clip(min(finish, t) - start, 0, duration)`` seconds
     (finish was recorded at launch as start + duration), so no per-round
-    accumulation is needed: the busy integral divided by ``W * t``."""
+    accumulation is needed: the busy integral divided by ``W * t``.
+
+    ``provenance`` (a ``Provenance``, with ``dt``) adds the delay-breakdown
+    columns: per-component nanmeans over completed jobs
+    (``mean_<component>``, ``repro.simx.provenance.COMPONENTS``) that sum
+    to ``mean`` by construction — the in-jit Fig. 2 counterpart of
+    ``SimxRun.delay_decomposition``."""
     if has_queues is None:
         has_queues = isinstance(state, QueueState)
     done = state.task_finish <= state.t
@@ -142,6 +152,16 @@ def point_summary(
     else:
         out["res_overflow"] = jnp.int32(0)
         out["probe_lag"] = jnp.int32(0)
+    if provenance is not None:
+        from repro.simx.provenance import COMPONENTS, decompose_delays
+
+        if dt is None:
+            raise ValueError("point_summary(provenance=...) needs dt")
+        comp = decompose_delays(
+            provenance, state.task_finish, state.t, tasks, dt
+        )
+        for key in COMPONENTS:
+            out[f"mean_{key}"] = jnp.nanmean(comp[key])
     return out
 
 
@@ -264,6 +284,7 @@ def sweep_grid(
     num_rounds: int,
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
+    provenance: bool = False,
 ) -> dict[str, jax.Array]:
     """Run the whole (load x seed) grid as one jitted vmap-of-vmap program.
 
@@ -272,7 +293,9 @@ def sweep_grid(
     ``runtime.default_match_fn`` for the Pallas-vs-jnp choice) — each
     registered rule consumes the one(s) it needs.  Returns
     ``point_summary`` fields stacked to ``[L, S]`` arrays plus the total
-    simulated task count (for tasks/sec accounting).
+    simulated task count (for tasks/sec accounting).  ``provenance=True``
+    carries the per-task lifecycle arrays through every point and adds the
+    ``mean_<component>`` delay-breakdown columns.
     """
     name = scheduler.lower()
     rule = runtime.get_rule(name)  # fail fast on unknown schedulers
@@ -281,9 +304,14 @@ def sweep_grid(
         tk = dataclasses.replace(tasks, submit=sub, job_submit=jsub)
         state = runtime.simulate_fixed(
             name, cfg, tk, seed, num_rounds,
-            match_fn=match_fn, pick_fn=pick_fn,
+            match_fn=match_fn, pick_fn=pick_fn, provenance=provenance,
         )
-        return point_summary(state, tk, has_queues=rule.has_queues)
+        prov = None
+        if provenance:
+            state, prov = state
+        return point_summary(
+            state, tk, has_queues=rule.has_queues, provenance=prov, dt=cfg.dt
+        )
 
     grid = jax.jit(
         jax.vmap(                     # loads
@@ -308,6 +336,7 @@ def fig2_sweep(
     use_pallas: bool = False,
     interpret: bool = True,
     mem_limit_gb: Optional[float] = 16.0,
+    provenance: bool = False,
     **cfg_kwargs,
 ) -> dict[str, np.ndarray]:
     """Convenience wrapper: build the load grid, size the round budget off
@@ -356,6 +385,7 @@ def fig2_sweep(
         pick_fn=default_match_fn(
             use_pallas=use_pallas, interpret=interpret, block_rows=1
         ),
+        provenance=provenance,
     )
     res = {k: np.asarray(v) for k, v in out.items()}
     res["loads"] = np.asarray(loads)

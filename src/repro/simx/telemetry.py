@@ -154,6 +154,98 @@ class Timeline:
 
 
 # ---------------------------------------------------------------------------
+# provenance span tracing (Chrome "X" duration events)
+# ---------------------------------------------------------------------------
+
+
+#: tid offset for per-worker execution tracks (GM/scheduler queue tracks
+#: sit at ``1 + gm``; workers at ``WORKER_TID_BASE + worker``) — keeping
+#: the mapping static makes traces from different runs line up.
+WORKER_TID_BASE = 1000
+
+
+def provenance_spans(
+    prov,
+    state,
+    tasks: TaskArrays,
+    cfg: SimxConfig,
+    pid: int = 1,
+    name: Optional[str] = None,
+    max_tasks: Optional[int] = None,
+) -> list[dict]:
+    """Chrome trace duration events (``"ph": "X"``) from a run's
+    ``Provenance`` (``repro.simx.provenance``).
+
+    Each finished task contributes two spans:
+
+      * a **wait** span on the placing scheduler's track (``tid = 1 + gm``,
+        gm from ``placed_gm``) covering submit -> launch — the queueing the
+        decomposition splits into components;
+      * a **run** span on the placed worker's track
+        (``tid = WORKER_TID_BASE + worker``) covering start -> finish.
+
+    Thread-name metadata events label both track families, so the pid/tid
+    mapping is self-describing; timestamps are microseconds of simulated
+    time, matching ``Timeline.to_chrome_trace`` counter tracks (emit both
+    under one pid to overlay them).  ``max_tasks`` truncates to the first N
+    tasks (trace viewers choke far before the arrays do).
+    """
+    from repro.simx.provenance import UNSET
+
+    tf = np.asarray(state.task_finish, np.float64)
+    end_t = float(state.t)
+    dur = np.asarray(tasks.duration, np.float64)
+    sub = np.asarray(tasks.submit, np.float64)
+    job = np.asarray(tasks.job)
+    launch_r = np.asarray(prov.launch_round)
+    gm = np.asarray(prov.placed_gm)
+    worker = np.asarray(prov.placed_worker)
+    requeue = np.asarray(prov.requeue_count)
+    stale = np.asarray(prov.stale_retry_count)
+    done = (tf <= end_t) & (launch_r != UNSET) & (worker != UNSET)
+    ids = np.nonzero(done)[0]
+    if max_tasks is not None:
+        ids = ids[:max_tasks]
+
+    events: list[dict] = []
+    if name is not None:
+        events.append({
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": name},
+        })
+    for g in sorted({int(gm[i]) for i in ids} | ({0} if not ids.size else set())):
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid, "tid": 1 + g,
+            "args": {"name": f"gm{g}"},
+        })
+    for w in sorted({int(worker[i]) for i in ids}):
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid,
+            "tid": WORKER_TID_BASE + w, "args": {"name": f"worker{w}"},
+        })
+    for i in ids:
+        start = tf[i] - dur[i]                      # recorded at launch
+        label = f"job{int(job[i])}/task{int(i)}"
+        args = {
+            "job": int(job[i]), "task": int(i),
+            "requeues": int(requeue[i]), "stale_retries": int(stale[i]),
+        }
+        wait = max(0.0, start - sub[i])
+        events.append({
+            "name": f"{label} wait", "ph": "X", "pid": pid,
+            "tid": 1 + int(gm[i]), "ts": sub[i] * 1e6, "dur": wait * 1e6,
+            "args": args,
+        })
+        events.append({
+            "name": label, "ph": "X", "pid": pid,
+            "tid": WORKER_TID_BASE + int(worker[i]),
+            "ts": start * 1e6, "dur": dur[i] * 1e6, "args": args,
+        })
+    events.sort(key=lambda e: (e["ph"] != "M", e.get("ts", 0.0)))
+    return events
+
+
+# ---------------------------------------------------------------------------
 # shared gauges + the delay histogram (all in-jit)
 # ---------------------------------------------------------------------------
 
@@ -399,14 +491,15 @@ def scan_blocks(
     are sampled from the window-end state.  Returns ``(state, series)``
     with ``series`` a dict of ``[num_blocks]`` arrays including ``"t"``."""
 
-    def block(s, _):
-        s, counters = jax.lax.scan(
-            lambda s2, __: step(s2), s, None, length=stride
+    def block(c, _):
+        c, counters = jax.lax.scan(
+            lambda c2, __: step(c2), c, None, length=stride
         )
         out = jax.tree.map(lambda v: jnp.sum(v, axis=0), counters)
+        s = runtime.carry_state(c)
         out.update(sample_fn(s))
         out["t"] = s.t
-        return s, out
+        return c, out
 
     return jax.lax.scan(block, state, None, length=num_blocks)
 
@@ -432,7 +525,8 @@ def scan_rounds_telemetry(
     if rem:
         state = advance_plain(step, state, rem)
     t_axis = series.pop("t")
-    hist = delay_histogram(state.task_finish, state.t, tasks, tel)
+    s = runtime.carry_state(state)
+    hist = delay_histogram(s.task_finish, s.t, tasks, tel)
     return state, Timeline(
         t=t_axis,
         series=series,
