@@ -1,0 +1,37 @@
+"""Static contract analysis for the simx round-stage runtime.
+
+Three layers, each wired into CI as a hard gate (``docs/static_analysis.md``):
+
+  * ``repro.analysis.specs`` — machine-readable shape/dtype contracts.
+    Every field of the simx pytree dataclasses (``CoreState`` hierarchy,
+    ``TaskArrays``, ``FaultSchedule``, ``Provenance``, the stream layout
+    pytrees, the telemetry sketch) carries a declarative ``"int32[W, R]"``
+    spec in its dataclass field metadata; ``check_state(state, dims)``
+    validates a live pytree against them (parity/conservation tests call
+    it), and ``repro.analysis.speccheck`` cross-checks that constructors,
+    steps, and the streaming remappers agree with the declared dtypes —
+    catching silent int32 -> float32 weak-type promotion drift.
+  * ``repro.analysis.simxlint`` — an AST lint pass (CLI:
+    ``python -m repro.analysis.simxlint src/repro/simx benchmarks``) that
+    flags jit-hostile idioms with stable codes and ``file:line`` output:
+    Python ``if``/``while`` on traced values inside step builders, host
+    syncs under ``lax.scan``, per-call ``jax.jit`` construction,
+    un-registered dataclass pytrees, dispatch stages writing
+    runtime-owned state fields, and incomplete rule registrations.
+    Deliberate exceptions carry ``# simxlint: disable=CODE``.
+  * ``repro.analysis.sentinels`` — dynamic sentinels wrapping
+    ``jax.log_compiles`` / ``jax.checking_leaks``: ``count_compiles()``
+    asserts the PR 7 compile-cache behavior (one XLA program per
+    (rule, cfg, rounds_per_refill)) and ``assert_no_tracer_leaks()``
+    guards the stage helpers; ``tests/test_analysis.py`` runs both over
+    every registered rule.
+"""
+
+from repro.analysis.specs import (  # noqa: F401
+    Spec,
+    SpecError,
+    check_state,
+    field_specs,
+    missing_specs,
+    parse_spec,
+)

@@ -1,0 +1,119 @@
+"""Dynamic sentinels: recompile counting and tracer-leak detection.
+
+The static layers (specs, simxlint) catch contract drift they can see in
+the source; these sentinels catch the two failure modes only visible at
+run time:
+
+  * **Stray recompiles** — the PR 7 streaming engine promises ONE
+    compiled segment per (rule, cfg, rounds_per_refill): the segment is
+    ``functools.lru_cache``'d and every refill re-enters it with
+    identical avals.  A shape/dtype drift in a layout remapper (what the
+    spec layer guards) or a weak-type flip silently turns that into a
+    compile *per refill* — ~100x slower and invisible unless counted.
+    ``count_compiles()`` wraps ``jax.log_compiles`` and counts backend
+    compilations; ``assert_compiles_once(fn)`` runs ``fn`` twice and
+    asserts the second, identical run compiles nothing new.
+  * **Tracer leaks** — a stage helper stashing a traced array on a
+    python object (a closure, a module global, a dataclass it mutates)
+    escapes the trace and fails much later with an opaque
+    ``UnexpectedTracerError``.  ``assert_no_tracer_leaks()`` wraps
+    ``jax.checking_leaks`` so the leak fails AT the leaking function.
+
+``tests/test_analysis.py`` runs both over every registered rule:
+chunked fixed-trace runs and streamed steady-state runs per rule, each
+asserting warm-cache silence.  The pytest fixture ``compile_sentinel``
+(``tests/conftest.py``) exposes the counter to any suite.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import logging
+from dataclasses import dataclass, field
+
+import jax
+
+#: jax loggers that emit one record per backend compilation under
+#: ``jax.log_compiles`` (the module moved across jax versions; listening
+#: on all three keeps the counter stable)
+_COMPILE_LOGGERS = (
+    "jax._src.interpreters.pxla",
+    "jax._src.dispatch",
+    "jax._src.compiler",
+)
+
+#: substrings identifying a compilation record (vs. tracing chatter)
+_COMPILE_MARKERS = ("Compiling ", "compiling ")
+
+
+@dataclass
+class CompileCount:
+    """Mutable counter a ``count_compiles()`` block fills in."""
+
+    count: int = 0
+    what: list = field(default_factory=list)
+
+    def snapshot(self) -> int:
+        return self.count
+
+
+class _CompileHandler(logging.Handler):
+    def __init__(self, counter: CompileCount):
+        super().__init__(level=logging.DEBUG)
+        self.counter = counter
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if any(m in msg for m in _COMPILE_MARKERS):
+            self.counter.count += 1
+            self.counter.what.append(msg.split("\n", 1)[0][:200])
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Count backend compilations inside the block.
+
+    Yields a ``CompileCount`` whose ``.count`` is live — read it
+    mid-block to diff phases (warmup vs. steady state).  ``.what`` keeps
+    the first line of each compile record so a failing sentinel can say
+    WHICH function recompiled."""
+    counter = CompileCount()
+    handler = _CompileHandler(counter)
+    loggers = [logging.getLogger(name) for name in _COMPILE_LOGGERS]
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.log_compiles(True))
+        for lg in loggers:
+            lg.addHandler(handler)
+            stack.callback(lg.removeHandler, handler)
+        # mute jax's stderr handler (it lives on the parent "jax"
+        # logger) while we count, so a sentinel-wrapped test doesn't
+        # spray a WARNING line per compile
+        for h in logging.getLogger("jax").handlers:
+            stack.callback(h.setLevel, h.level)
+            h.setLevel(logging.CRITICAL)
+        yield counter
+
+
+@contextlib.contextmanager
+def assert_no_tracer_leaks():
+    """Fail at the leak site if any traced value escapes its trace."""
+    with jax.checking_leaks():
+        yield
+
+
+def assert_compiles_once(fn, *, warmups: int = 1, label: str = "") -> int:
+    """Run ``fn`` ``warmups`` times (cold cache), then once more and
+    assert the extra run compiled NOTHING — the compile-once contract.
+    Returns the warmup compile count (callers may bound it too)."""
+    with count_compiles() as warm:
+        for _ in range(warmups):
+            fn()
+    with count_compiles() as steady:
+        fn()
+    if steady.count:
+        raise AssertionError(
+            f"{label or getattr(fn, '__name__', 'fn')}: warm-cache run "
+            f"compiled {steady.count} new program(s) — the compile-once "
+            f"contract is broken. Recompiled: {steady.what}"
+        )
+    return warm.count

@@ -1,0 +1,586 @@
+"""simxlint: AST lint rules for jit-hostile idioms in the simx runtime.
+
+The round-stage runtime only performs when every step stays inside one
+compiled program: a Python branch on a traced value aborts tracing, a
+host sync under ``lax.scan`` serializes the device queue, a per-call
+``jax.jit`` defeats the compile cache PR 7 built, an unregistered
+dataclass breaks the pytree carry, and a dispatch stage writing a
+runtime-owned field silently double-advances the round clock.  Each of
+those used to be folkloric review knowledge; this pass makes them lint
+rules with stable codes over ``src/repro/simx`` and ``benchmarks``.
+
+Rule catalog (see ``docs/static_analysis.md``):
+
+  JH001  Python ``if`` on a traced value inside a jit scope
+  JH002  Python ``while`` on a traced value inside a jit scope
+  JH003  host sync inside a jit scope: ``.item()`` / ``.tolist()``,
+         ``float()`` / ``int()`` / ``bool()`` of traced expressions,
+         ``np.*`` applied to traced arguments
+  RC101  per-call ``jax.jit`` construction (immediately-invoked
+         ``jax.jit(f)(x)``, ``jax.jit`` built in a loop body or inside a
+         jit scope) — defeats the compile cache
+  PT101  ``@dataclass`` with ``jax.Array`` fields but no
+         ``jax.tree_util.register_dataclass``
+  SC101  dispatch stage writes a runtime-owned state field
+         (``runtime.RUNTIME_OWNED_FIELDS``: the ``metrics`` stage owns
+         ``t``/``rnd``/``lost`` per ``runtime.STAGE_TABLE``)
+  SC102  ``register_rule(Rule(...))`` missing a required key
+         (``name`` / ``init`` / ``build_step``)
+
+**Jit scope** is decided statically: a function is jit scope when it is
+(a) decorated with ``jax.jit`` (bare or via ``functools.partial``);
+(b) named ``dispatch`` (the stage contract's rule hook, always traced);
+(c) passed by name to a ``jax``/``lax`` control-flow or transform call
+(``lax.scan``, ``lax.cond``, ``jax.jit(f)``, ...); (d) the function a
+step builder (``make_*_step`` / ``_build_step`` / ``compose_step`` /
+``_make_segment``) returns by name; (e) marked ``# simxlint: jit-scope``
+on its ``def`` line; or — transitively — (f) lexically nested inside a
+jit-scope function or (g) called by name from one (megha's
+``piggyback`` / ``borrow`` helpers).  Builder *bodies* are host code:
+a nested numpy helper the builder only calls at build time (pigeon's
+``class_layout``) is NOT jit scope.  "Traced value" is approximated as
+an expression containing a call rooted at ``jnp`` / ``jax`` / ``lax``
+or referencing a parameter of an enclosing jit-scope function — static
+host conditionals (``if faults is None:``) never fire.
+
+Suppression: ``# simxlint: disable=CODE[,CODE...]`` on the flagged line
+silences it there; ``# simxlint: disable-file=CODE`` at any line
+silences the code for the whole file.  Suppressions are for *deliberate*
+host syncs (a documented non-jittable helper), never for convenience —
+policy in ``docs/static_analysis.md``.
+
+CLI::
+
+    python -m repro.analysis.simxlint src/repro/simx benchmarks
+    python -m repro.analysis.simxlint --report lint_report.json PATH...
+
+Exit 0 when clean, 1 when any finding survives suppression (the CI
+``simxlint`` job gates on this), 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Optional
+
+#: builder functions whose NESTED functions are the traced step (their
+#: own bodies are host code)
+_BUILDER_RE = re.compile(r"^(make_\w+_step|_?build_step|compose_step|_make_segment)$")
+
+#: jax/lax callables that receive functions to trace
+_TRACING_CALLS = {
+    "scan", "cond", "while_loop", "fori_loop", "switch", "map",
+    "jit", "vmap", "pmap", "checkpoint", "custom_jvp", "custom_vjp",
+}
+
+#: roots of traced-namespace calls (``jnp.any(...)``, ``lax.cond``, ...)
+_TRACED_ROOTS = {"jnp", "jax", "lax"}
+
+_DISABLE_LINE_RE = re.compile(r"#\s*simxlint:\s*disable=([A-Z0-9, ]+)")
+_DISABLE_FILE_RE = re.compile(r"#\s*simxlint:\s*disable-file=([A-Z0-9, ]+)")
+_JIT_SCOPE_MARK_RE = re.compile(r"#\s*simxlint:\s*jit-scope")
+
+_REQUIRED_RULE_KEYS = ("name", "init", "build_step")
+
+
+def _runtime_owned_fields() -> tuple:
+    """The SC101 reserved-write set, imported from the runtime's stage
+    table when available so the lint rule and the runtime cannot drift;
+    the literal fallback keeps the linter usable standalone."""
+    try:
+        from repro.simx.runtime import RUNTIME_OWNED_FIELDS
+
+        return tuple(RUNTIME_OWNED_FIELDS)
+    except Exception:
+        return ("t", "rnd", "lost")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation, formatted ``file:line: CODE message``."""
+
+    file: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: {self.code} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> str:
+    """``jax.tree_util.register_dataclass`` -> that string; '' if not a
+    plain name/attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _root(node: ast.AST) -> str:
+    d = _dotted(node)
+    return d.split(".", 1)[0] if d else ""
+
+
+def _has_traced_call(expr: ast.AST) -> bool:
+    """Does the expression contain a call rooted at jnp/jax/lax?"""
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call) and _root(n.func) in _TRACED_ROOTS:
+            return True
+    return False
+
+
+def _names_in(expr: ast.AST) -> set:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """``@jax.jit``, ``@jit``, ``@partial(jax.jit, ...)``, or
+    ``@functools.partial(jax.jit, ...)``."""
+    d = _dotted(dec)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        f = _dotted(dec.func)
+        if f in ("jax.jit", "jit"):
+            return True
+        if f.endswith("partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _is_dataclass_decorator(dec: ast.AST) -> bool:
+    d = _dotted(dec.func) if isinstance(dec, ast.Call) else _dotted(dec)
+    return d in ("dataclass", "dataclasses.dataclass")
+
+
+def _is_register_decorator(dec: ast.AST) -> bool:
+    d = _dotted(dec.func) if isinstance(dec, ast.Call) else _dotted(dec)
+    return d.endswith("register_dataclass") or d.endswith("register_pytree_node_class")
+
+
+def _traced_function_names(tree: ast.Module) -> set:
+    """Names passed as arguments to jax/lax tracing calls anywhere in the
+    module (``lax.scan(body, ...)`` marks ``body`` as traced)."""
+    out: set = set()
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Call):
+            continue
+        d = _dotted(n.func)
+        root, _, leaf = d.rpartition(".")
+        if leaf in _TRACING_CALLS and (
+            root.split(".")[0] in _TRACED_ROOTS or (not root and leaf == "jit")
+        ):
+            for a in n.args:
+                if isinstance(a, ast.Name):
+                    out.add(a.id)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the linter
+# ---------------------------------------------------------------------------
+
+
+class _FileLinter:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+        self.file_disabled: set = set()
+        for line in self.lines:
+            m = _DISABLE_FILE_RE.search(line)
+            if m:
+                self.file_disabled |= {c.strip() for c in m.group(1).split(",")}
+
+    # -- suppression ----------------------------------------------------
+
+    def _line_disabled(self, line: int, code: str) -> bool:
+        if code in self.file_disabled:
+            return True
+        if 1 <= line <= len(self.lines):
+            m = _DISABLE_LINE_RE.search(self.lines[line - 1])
+            if m and code in {c.strip() for c in m.group(1).split(",")}:
+                return True
+        return False
+
+    def _emit(self, node: ast.AST, code: str, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if not self._line_disabled(line, code):
+            self.findings.append(Finding(self.path, line, code, message))
+
+    def _marked_jit_scope(self, fn: ast.AST) -> bool:
+        line = getattr(fn, "lineno", 0)
+        if 1 <= line <= len(self.lines):
+            return bool(_JIT_SCOPE_MARK_RE.search(self.lines[line - 1]))
+        return False
+
+    # -- driver ---------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        try:
+            tree = ast.parse(self.source, filename=self.path)
+        except SyntaxError as e:
+            self.findings.append(
+                Finding(self.path, e.lineno or 0, "E000", f"syntax error: {e.msg}")
+            )
+            return self.findings
+        traced_names = _traced_function_names(tree)
+        self._module_rules(tree)
+        self._jit_scope_pass(tree, traced_names)
+        return self.findings
+
+    # -- module-level rules (PT101, SC102, RC101-loop) -------------------
+
+    def _module_rules(self, tree: ast.Module) -> None:
+        for n in ast.walk(tree):
+            if isinstance(n, ast.ClassDef):
+                self._check_pytree(n)
+            if isinstance(n, ast.Call):
+                self._check_register_rule(n)
+                # RC101: jax.jit(f)(args) — compiled object built and
+                # thrown away every call
+                if (
+                    isinstance(n.func, ast.Call)
+                    and _dotted(n.func.func) in ("jax.jit", "jit")
+                ):
+                    self._emit(
+                        n, "RC101",
+                        "jax.jit(...) built and invoked in one expression — "
+                        "the compiled callable is discarded after the call; "
+                        "hoist the jit to module/build scope to reuse the "
+                        "compile cache",
+                    )
+            if isinstance(n, (ast.For, ast.While)):
+                for inner in ast.walk(n):
+                    if (
+                        isinstance(inner, ast.Call)
+                        and _dotted(inner.func) in ("jax.jit", "jit")
+                        # decorators and tracing-call args are fine; only
+                        # flag a jit object constructed per iteration
+                        and not isinstance(inner.func, ast.Call)
+                    ):
+                        self._emit(
+                            inner, "RC101",
+                            "jax.jit(...) constructed inside a loop body — "
+                            "every iteration makes a fresh callable with an "
+                            "empty cache; build it once before the loop",
+                        )
+
+    def _check_pytree(self, cls: ast.ClassDef) -> None:
+        if not any(_is_dataclass_decorator(d) for d in cls.decorator_list):
+            return
+        if any(_is_register_decorator(d) for d in cls.decorator_list):
+            return
+        has_array = any(
+            isinstance(st, ast.AnnAssign)
+            and "jax.Array" in ast.unparse(st.annotation)
+            for st in cls.body
+        )
+        if has_array:
+            self._emit(
+                cls, "PT101",
+                f"dataclass {cls.name!r} carries jax.Array fields but is not "
+                "@jax.tree_util.register_dataclass — it will not traverse as "
+                "a pytree (scan carries / vmap leaves silently break)",
+            )
+
+    def _check_register_rule(self, call: ast.Call) -> None:
+        if not _dotted(call.func).endswith("register_rule"):
+            return
+        for a in call.args:
+            if isinstance(a, ast.Call) and _dotted(a.func).split(".")[-1] == "Rule":
+                given = {k.arg for k in a.keywords if k.arg}
+                missing = [k for k in _REQUIRED_RULE_KEYS if k not in given]
+                # positional args fill name/init/build_step in order
+                missing = missing[len(a.args):] if a.args else missing
+                if missing:
+                    self._emit(
+                        a, "SC102",
+                        "register_rule(Rule(...)) missing required "
+                        f"key(s): {', '.join(missing)} — the registry "
+                        "contract needs name, init, and build_step",
+                    )
+
+    # -- scope walk (JH001/2/3, RC101-in-jit, SC101) ---------------------
+
+    def _jit_scope_pass(self, tree: ast.Module, traced_names: set) -> None:
+        """Two-phase jit-scope resolution.  Phase 1 indexes every function
+        (parent links, own-body call targets); phase 2 seeds the jit set
+        (dispatch / decorated / traced-by-name / builder-returned /
+        marked) and propagates to a fixpoint through lexical nesting and
+        same-module calls-by-name.  Then each jit-scope function body is
+        linted with the parameter names of itself and its jit ancestors."""
+        funcs: dict = {}        # id -> node
+        parent: dict = {}       # id -> enclosing function id (or None)
+        by_name: dict = {}      # name -> [ids]
+        own_calls: dict = {}    # id -> set of names called in own body
+        returned_by_builder: set = set()
+
+        def own_body(node):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                yield child
+                yield from own_body(child)
+
+        def index(node, enclosing):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fid = id(child)
+                    funcs[fid] = child
+                    parent[fid] = enclosing
+                    by_name.setdefault(child.name, []).append(fid)
+                    own_calls[fid] = {
+                        _root(n.func)
+                        for n in own_body(child)
+                        if isinstance(n, ast.Call)
+                    } | {
+                        n.id
+                        for n in own_body(child)
+                        if isinstance(n, ast.Name)
+                    }
+                    if _BUILDER_RE.match(child.name):
+                        for n in own_body(child):
+                            if isinstance(n, ast.Return) and isinstance(
+                                n.value, ast.Name
+                            ):
+                                returned_by_builder.add((fid, n.value.id))
+                    index(child, fid)
+                else:
+                    index(child, enclosing)
+
+        index(tree, None)
+
+        jit: set = set()
+        for fid, fn in funcs.items():
+            if (
+                fn.name == "dispatch"
+                or fn.name in traced_names
+                or any(_is_jit_decorator(d) for d in fn.decorator_list)
+                or self._marked_jit_scope(fn)
+                or (parent[fid], fn.name) in returned_by_builder
+            ):
+                jit.add(fid)
+        changed = True
+        while changed:
+            changed = False
+            for fid, fn in funcs.items():
+                if fid in jit:
+                    continue
+                # lexically nested inside a jit-scope function
+                if parent[fid] in jit:
+                    jit.add(fid)
+                    changed = True
+                    continue
+                # called by name from a jit-scope function's own body
+                # (resolve within the same enclosing scope or module)
+                for jid in jit:
+                    if fn.name in own_calls[jid]:
+                        jit.add(fid)
+                        changed = True
+                        break
+
+        for fid in jit:
+            fn = funcs[fid]
+            params: set = set()
+            cur = fid
+            while cur is not None:
+                if cur in jit:
+                    f = funcs[cur]
+                    params |= {
+                        a.arg
+                        for a in (
+                            f.args.posonlyargs + f.args.args + f.args.kwonlyargs
+                        )
+                    }
+                cur = parent[cur]
+            self._lint_jit_body(fn, frozenset(params))
+            if fn.name == "dispatch":
+                self._check_dispatch_writes(fn)
+
+    def _lint_jit_body(self, fn: ast.AST, params: frozenset) -> None:
+        """JH/RC rules over one jit-scope function body (nested defs get
+        their own pass, so stop at them)."""
+        def iter_own(node):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+                ):
+                    continue
+                yield child
+                yield from iter_own(child)
+
+        def is_traced_expr(expr: ast.AST) -> bool:
+            return _has_traced_call(expr) or bool(_names_in(expr) & params)
+
+        for n in iter_own(fn):
+            if isinstance(n, ast.If) and _has_traced_call(n.test):
+                self._emit(
+                    n, "JH001",
+                    "Python `if` on a traced value inside a jit scope — "
+                    "tracing cannot branch on array data; use jnp.where / "
+                    "lax.cond / lax.select",
+                )
+            elif isinstance(n, ast.While) and _has_traced_call(n.test):
+                self._emit(
+                    n, "JH002",
+                    "Python `while` on a traced value inside a jit scope — "
+                    "use lax.while_loop / lax.fori_loop",
+                )
+            elif isinstance(n, ast.Call):
+                d = _dotted(n.func)
+                if isinstance(n.func, ast.Attribute) and n.func.attr in (
+                    "item", "tolist"
+                ):
+                    self._emit(
+                        n, "JH003",
+                        f".{n.func.attr}() inside a jit scope — forces a "
+                        "device->host sync and breaks under trace; keep the "
+                        "value on device",
+                    )
+                elif d in ("float", "int", "bool") and n.args and any(
+                    is_traced_expr(a) for a in n.args
+                ):
+                    self._emit(
+                        n, "JH003",
+                        f"{d}() of a traced value inside a jit scope — host "
+                        "conversion aborts tracing; use .astype(...) or keep "
+                        "the array",
+                    )
+                elif _root(n.func) == "np" and any(
+                    bool(_names_in(a) & params) for a in n.args
+                ):
+                    self._emit(
+                        n, "JH003",
+                        f"{d}(...) applied to traced arguments inside a jit "
+                        "scope — numpy pulls the array to host; use the jnp "
+                        "equivalent",
+                    )
+                elif d in ("jax.jit", "jit") and not isinstance(n.func, ast.Call):
+                    self._emit(
+                        n, "RC101",
+                        "jax.jit(...) constructed inside a jit scope — "
+                        "nested per-trace jit objects never share a cache; "
+                        "hoist to build scope",
+                    )
+
+    def _check_dispatch_writes(self, fn: ast.FunctionDef) -> None:
+        """SC101: the dispatch stage's update dict must not contain
+        runtime-owned fields (``runtime.STAGE_TABLE`` gives ``t``/``rnd``
+        to the metrics stage and ``lost`` to the fault stage)."""
+        owned = set(_runtime_owned_fields())
+
+        def check_keys(node: ast.AST, keys: Iterable) -> None:
+            bad = sorted(owned & set(keys))
+            if bad:
+                self._emit(
+                    node, "SC101",
+                    f"dispatch writes runtime-owned field(s) {', '.join(bad)}"
+                    " — the runtime advances t/rnd and folds lost itself "
+                    "(see runtime.STAGE_TABLE); returning them from dispatch "
+                    "double-applies the update",
+                )
+
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Dict):
+                check_keys(
+                    n,
+                    (
+                        k.value
+                        for k in n.keys
+                        if isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    ),
+                )
+            elif isinstance(n, ast.Call) and _dotted(n.func) == "dict":
+                check_keys(n, (k.arg for k in n.keywords if k.arg))
+            elif (
+                isinstance(n, ast.Assign)
+                and len(n.targets) == 1
+                and isinstance(n.targets[0], ast.Subscript)
+                and isinstance(n.targets[0].slice, ast.Constant)
+                and isinstance(n.targets[0].slice.value, str)
+            ):
+                check_keys(n, (n.targets[0].slice.value,))
+
+
+# ---------------------------------------------------------------------------
+# driver / CLI
+# ---------------------------------------------------------------------------
+
+
+def lint_file(path) -> list[Finding]:
+    p = Path(path)
+    return _FileLinter(str(p), p.read_text()).run()
+
+
+def lint_paths(paths: Iterable) -> list[Finding]:
+    """Lint every ``.py`` file under the given files/directories, sorted
+    findings by (file, line, code)."""
+    files: list[Path] = []
+    for p in map(Path, paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+        else:
+            raise FileNotFoundError(f"{p}: not a .py file or directory")
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f))
+    return sorted(findings, key=lambda x: (x.file, x.line, x.code))
+
+
+def main(argv: Optional[list] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    report: Optional[str] = None
+    if "--report" in argv:
+        i = argv.index("--report")
+        try:
+            report = argv[i + 1]
+        except IndexError:
+            print("simxlint: --report needs a file argument", file=sys.stderr)
+            return 2
+        del argv[i : i + 2]
+    if not argv:
+        print(
+            "usage: python -m repro.analysis.simxlint [--report FILE] PATH...",
+            file=sys.stderr,
+        )
+        return 2
+    try:
+        findings = lint_paths(argv)
+    except FileNotFoundError as e:
+        print(f"simxlint: {e}", file=sys.stderr)
+        return 2
+    for f in findings:
+        print(f)
+    if report:
+        Path(report).write_text(
+            json.dumps([dataclasses.asdict(f) for f in findings], indent=2) + "\n"
+        )
+    if findings:
+        print(f"simxlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"simxlint: clean over {len(argv)} path(s)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

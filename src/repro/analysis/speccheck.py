@@ -1,0 +1,256 @@
+"""speccheck: static cross-check of the simx shape/dtype contracts.
+
+``repro.analysis.specs`` declares the contracts; this module PROVES the
+code agrees with them, at small sizes, on every surface that constructs
+or remaps state:
+
+  1. **Coverage** — every known pytree dataclass parses all its specs
+     and has no array-annotated field without one.
+  2. **Constructors** — each registered rule's ``init`` (plus
+     ``empty_schedule``, ``init_provenance``, ``sketch_init``, and
+     ``export_workload``) produces exactly the declared dtypes/shapes.
+  3. **Step stability** — three rounds of every rule's fixed-trace step
+     keep the state on-spec: the classic silent failure is an
+     ``x + 1.0`` promoting an int32 field to weak float32 mid-scan,
+     which never crashes — it just recompiles and drifts.
+  4. **Stage helpers** — ``finish_pad`` / ``sorted_fifo`` /
+     ``launched_lead`` / ``completion_masks`` / ``job_delays_from_state``
+     emit their documented dtypes.
+  5. **Streaming layouts** — each rule's ``_StreamWindow`` layout pytree
+     (and the post-refill remap) matches its declared specs, so one
+     compiled segment keeps serving every refilled window.
+
+CLI (the CI ``simxlint`` job runs this next to the linter)::
+
+    python -m repro.analysis.speccheck [--report FILE]
+
+Exit 0 when every check passes, 1 with one ``CHECK ... FAIL`` line per
+violation otherwise.  Pure CPU, a few seconds: sizes are tiny (W=32).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+from pathlib import Path
+from typing import Callable, Optional
+
+from repro.analysis.specs import SpecError, check_state, dims_for, missing_specs, parse_spec
+
+
+def _known_pytrees():
+    from repro.simx import eagle, faults, megha, pigeon, provenance, sparrow
+    from repro.simx import state as st
+    from repro.simx import telemetry as tlm
+
+    return (
+        st.TaskArrays, st.CoreState, st.QueueState, st.MeghaState,
+        st.SparrowState, st.EagleState, st.PigeonState, st.OracleState,
+        faults.FaultSchedule, provenance.Provenance,
+        megha.MeghaLayout, sparrow.ProbeLayout, eagle.EagleLayout,
+        pigeon.PigeonLayout, tlm.Timeline, tlm.QuantileSketch,
+    )
+
+
+def _small_setup():
+    """One tiny (cfg, tasks) every check shares: W=32 spans megha's 2x2
+    grid, pigeon's groups, and eagle's short partition."""
+    from repro.simx.state import SimxConfig, export_workload
+    from repro.workload.synth import synthetic_trace
+
+    cfg = SimxConfig(num_workers=32, num_gms=2, num_lms=2, group_size=16)
+    wl = synthetic_trace(
+        num_jobs=8, tasks_per_job=3, load=0.5, num_workers=32, seed=0
+    )
+    return cfg, export_workload(wl)
+
+
+class Report:
+    def __init__(self) -> None:
+        self.results: list[dict] = []
+
+    def run(self, name: str, fn: Callable[[], object]) -> None:
+        try:
+            fn()
+        except Exception as e:
+            detail = (
+                str(e) if isinstance(e, (SpecError, AssertionError))
+                else traceback.format_exc(limit=3)
+            )
+            self.results.append({"check": name, "ok": False, "detail": detail})
+            print(f"CHECK {name} FAIL\n  {detail}")
+        else:
+            self.results.append({"check": name, "ok": True})
+            print(f"CHECK {name} ok")
+
+    @property
+    def failures(self) -> int:
+        return sum(not r["ok"] for r in self.results)
+
+
+# ---------------------------------------------------------------------------
+# the checks
+# ---------------------------------------------------------------------------
+
+
+def check_coverage() -> None:
+    """Every pytree class: all specs parse, no array field unspec'd."""
+    import dataclasses
+
+    for cls in _known_pytrees():
+        gaps = missing_specs(cls)
+        assert not gaps, f"{cls.__name__}: array fields without a spec: {gaps}"
+        for f in dataclasses.fields(cls):
+            text = f.metadata.get("spec")
+            if text is not None:
+                parse_spec(text)  # raises SpecError on a malformed string
+
+
+def check_constructors() -> None:
+    """Rule inits + the shared pytree constructors are on-spec."""
+    from repro.simx import engine  # noqa: F401 — importing registers rules
+    from repro.simx import runtime as rt
+    from repro.simx.faults import empty_schedule
+    from repro.simx.provenance import init_provenance
+    from repro.simx.telemetry import sketch_init
+
+    cfg, tasks = _small_setup()
+    dims = dims_for(cfg, tasks)
+    check_state(tasks, dict(dims), where="TaskArrays")
+    for name, rule in rt.RULES.items():
+        check_state(rule.init(cfg, tasks), dict(dims), where=f"init[{name}]")
+    check_state(
+        empty_schedule(cfg.num_workers, cfg.num_gms), dict(dims),
+        where="empty_schedule",
+    )
+    check_state(init_provenance(tasks.num_tasks), dict(dims), where="Provenance")
+    check_state(sketch_init(), {}, where="QuantileSketch")
+
+
+def check_step_stability(rounds: int = 3) -> None:
+    """Each rule's step keeps every field's dtype/shape for ``rounds``
+    rounds — promotion drift shows up on the first advance."""
+    import jax
+
+    from repro.simx import runtime as rt
+
+    cfg, tasks = _small_setup()
+    dims = dims_for(cfg, tasks)
+    key = jax.random.PRNGKey(0)
+    for name, rule in rt.RULES.items():
+        step = rule.build_step(cfg, tasks, key)
+        state = rule.init(cfg, tasks)
+        for r in range(rounds):
+            state = step(state)
+            check_state(state, dict(dims), where=f"step[{name}] round {r + 1}")
+
+
+def check_stage_helpers() -> None:
+    """The shared stage helpers emit their documented dtypes."""
+    import jax.numpy as jnp
+
+    from repro.simx import runtime as rt
+
+    cfg, tasks = _small_setup()
+    tf = jnp.full(tasks.num_tasks, jnp.inf, jnp.float32)
+    fpad = rt.finish_pad(tf)
+    assert fpad.dtype == jnp.float32 and not fpad.weak_type, (
+        f"finish_pad: {fpad.dtype} weak={fpad.weak_type}, spec float32[T+1]"
+    )
+    assert fpad.shape == (tasks.num_tasks + 1,), fpad.shape
+
+    queued = jnp.ones((2, 5), jnp.bool_)
+    fifo = rt.sorted_fifo(queued, 5)
+    assert fifo.dtype == jnp.int32, f"sorted_fifo: {fifo.dtype}, spec int32"
+    lead = rt.launched_lead(queued)
+    assert lead.dtype == jnp.int32, f"launched_lead: {lead.dtype}, spec int32"
+
+    t = jnp.float32(0.0)
+    wf = jnp.full(cfg.num_workers, -jnp.inf, jnp.float32)
+    free, comp = rt.completion_masks(wf, t, cfg.dt)
+    assert free.dtype == jnp.bool_ and comp.dtype == jnp.bool_
+
+    delays, job_finish = rt.job_delays_from_state(tf, t, tasks)
+    assert delays.dtype == jnp.float32 and not delays.weak_type, (
+        f"job_delays_from_state delays: {delays.dtype} weak={delays.weak_type}"
+    )
+    assert job_finish.dtype == jnp.float32, job_finish.dtype
+    assert delays.shape == (tasks.num_jobs,), delays.shape
+
+
+def check_stream_layouts() -> None:
+    """Each rule's streaming window: the initial layout pytree AND the
+    post-refill remap stay on-spec (the remappers rebuild these arrays
+    on the host every refill — a dtype drift there means one recompile
+    per refill, exactly what the compile-once sentinel then catches)."""
+    from repro.simx import runtime as rt
+    from repro.simx import stream
+    from repro.workload.synth import PoissonArrivals
+
+    for name in rt.RULES:
+        cfg = stream.stream_config(name, 32, window_tasks=64, num_gms=2, num_lms=2)
+        win = stream._StreamWindow(
+            PoissonArrivals(rate=20.0, seed=0),
+            cfg, name, 16, 64, cfg.seed,
+        )
+        dims = {"W": cfg.num_workers, "G": cfg.num_gms, "NG": cfg.num_groups,
+                "T": win.T_cap, "J": win.J_cap}
+        tasks0 = win.tasks()
+        check_state(tasks0, dict(dims), where=f"stream[{name}].tasks")
+        layout = win.layout()
+        if layout is not None:
+            check_state(layout, dict(dims), where=f"stream[{name}].layout")
+        # drive one jitted segment + refill so the remap path runs —
+        # the same (_default_segment, refill) pair run_steady_state uses
+        from repro.simx import telemetry as tlm
+
+        rule = rt.get_rule(name)
+        state = rule.init(cfg, tasks0)
+        sketch = tlm.sketch_init()
+        seg = stream._default_segment(
+            name, cfg, 8, telemetry=None, stride=1, provenance=False
+        )
+        state, sketch, _gauges, _blocks = seg(state, tasks0, layout, sketch)
+        check_state(sketch, {}, where=f"stream[{name}].sketch")
+        state, _stats, _ = win.refill(state, collect_delays=False)
+        check_state(state, dict(dims), where=f"stream[{name}].state@refill")
+        check_state(win.tasks(), dict(dims), where=f"stream[{name}].tasks@refill")
+        layout = win.layout()
+        if layout is not None:
+            check_state(layout, dict(dims), where=f"stream[{name}].layout@refill")
+
+
+def run_all() -> Report:
+    rep = Report()
+    rep.run("coverage", check_coverage)
+    rep.run("constructors", check_constructors)
+    rep.run("step-stability", check_step_stability)
+    rep.run("stage-helpers", check_stage_helpers)
+    rep.run("stream-layouts", check_stream_layouts)
+    return rep
+
+
+def main(argv: Optional[list] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    report_path: Optional[str] = None
+    if "--report" in argv:
+        i = argv.index("--report")
+        try:
+            report_path = argv[i + 1]
+        except IndexError:
+            print("speccheck: --report needs a file argument", file=sys.stderr)
+            return 2
+        del argv[i : i + 2]
+    rep = run_all()
+    if report_path:
+        Path(report_path).write_text(json.dumps(rep.results, indent=2) + "\n")
+    if rep.failures:
+        print(f"speccheck: {rep.failures} check(s) failed", file=sys.stderr)
+        return 1
+    print("speccheck: all contracts hold", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,226 @@
+"""Declarative shape/dtype specs for the simx pytree dataclasses.
+
+The simx backend's correctness rests on array conventions that used to be
+prose only: every state field has a documented shape/dtype (``int32[W, R]``,
+``float32[T]``) that nothing enforced — a silent int32 -> float32 weak-type
+promotion (``x + 1.0``) or a remapper emitting int64 only surfaced as a
+downstream parity failure or a recompile.  This module makes the
+conventions machine-readable:
+
+  * Each dataclass field carries its spec string in the field *metadata*
+    (``dataclasses.field(metadata={"spec": "int32[W, R]"})``), so the
+    contract lives next to the declaration, survives
+    ``jax.tree_util.register_dataclass`` untouched, and needs no import
+    from this package at the declaration site.
+  * ``parse_spec`` / ``field_specs`` expose the contract programmatically;
+    ``missing_specs`` reports array-annotated fields that lack one (the
+    coverage half of ``repro.analysis.speccheck``).
+  * ``check_state(state, dims)`` validates a live pytree: exact dtype
+    (weak-typed arrays are rejected — they are exactly the promotion
+    hazard the spec exists to catch), and shapes resolved against a dim
+    symbol table (``{"W": 32, "G": 2, ...}``) where unknown symbols bind
+    on first use and must stay consistent across fields.  Nested spec'd
+    dataclasses (``EagleLayout.probes``) are validated recursively.
+
+Spec grammar (one line per field)::
+
+    spec   := dtype "[" dims? "]"
+    dtype  := "int32" | "float32" | "bool" | "int64" | "float64" | ...
+    dims   := dim ("," dim)*
+    dim    := SYMBOL | INTEGER | "?"          # "?" matches any size
+
+``"float32[]"`` is a scalar (shape ``()``); ``"int32[W, R]"`` a matrix
+whose dims resolve through the symbol table; ``"int32[G, ?]"`` fixes the
+row count but leaves the padded width free (the streaming layouts pad
+rows by window-derived amounts that are deliberately not part of the
+contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Any, Optional
+
+#: metadata key carrying the spec string on a dataclass field
+SPEC_KEY = "spec"
+
+_SPEC_RE = re.compile(r"^\s*([A-Za-z_][A-Za-z0-9_]*)\s*\[([^\]]*)\]\s*$")
+_DIM_RE = re.compile(r"^([A-Za-z_][A-Za-z0-9_]*|\d+|\?)$")
+
+
+class SpecError(ValueError):
+    """A pytree violated its declared shape/dtype contract."""
+
+
+@dataclass(frozen=True)
+class Spec:
+    """One parsed field contract: dtype name + symbolic dims."""
+
+    dtype: str
+    dims: tuple  # of str symbols, int literals, or "?" wildcards
+    text: str    # the original spec string, for messages
+
+    def __str__(self) -> str:
+        return self.text
+
+
+def parse_spec(text: str) -> Spec:
+    """Parse an ``"int32[W, R]"``-style spec string."""
+    m = _SPEC_RE.match(text)
+    if not m:
+        raise SpecError(
+            f"malformed spec {text!r}: expected dtype[dim, ...] "
+            "(e.g. 'int32[W, R]', 'float32[]')"
+        )
+    dtype, body = m.group(1), m.group(2).strip()
+    dims: list = []
+    if body:
+        for raw in body.split(","):
+            d = raw.strip()
+            if not _DIM_RE.match(d):
+                raise SpecError(f"malformed dim {d!r} in spec {text!r}")
+            dims.append(int(d) if d.isdigit() else d)
+    return Spec(dtype=dtype, dims=tuple(dims), text=text)
+
+
+def field_specs(cls) -> dict[str, Spec]:
+    """name -> parsed Spec for every spec-carrying field of ``cls``
+    (inherited fields included, declaration order preserved)."""
+    if not dataclasses.is_dataclass(cls):
+        raise TypeError(f"{cls!r} is not a dataclass")
+    out: dict[str, Spec] = {}
+    for f in dataclasses.fields(cls):
+        text = f.metadata.get(SPEC_KEY)
+        if text is not None:
+            out[f.name] = parse_spec(text)
+    return out
+
+
+def _is_array_annotation(f: dataclasses.Field) -> bool:
+    """Does this field's annotation declare a jax array?  Annotations are
+    strings under ``from __future__ import annotations``."""
+    t = f.type if isinstance(f.type, str) else getattr(f.type, "__name__", "")
+    return "jax.Array" in t or t == "Array"
+
+
+def missing_specs(cls) -> list[str]:
+    """Array-annotated fields of ``cls`` with no spec in their metadata —
+    the coverage gaps ``speccheck`` fails on."""
+    return [
+        f.name
+        for f in dataclasses.fields(cls)
+        if _is_array_annotation(f) and SPEC_KEY not in f.metadata
+    ]
+
+
+def _leaf_info(value) -> tuple[str, tuple, bool]:
+    """(dtype name, shape, weak) of an array leaf; raises on non-arrays."""
+    dtype = getattr(value, "dtype", None)
+    shape = getattr(value, "shape", None)
+    if dtype is None or shape is None:
+        raise SpecError(f"expected an array, got {type(value).__name__}")
+    weak = bool(getattr(value, "weak_type", False))
+    return str(dtype), tuple(shape), weak
+
+
+def check_state(
+    obj: Any,
+    dims: Optional[dict] = None,
+    *,
+    where: str = "",
+    allow_weak: bool = False,
+) -> dict:
+    """Validate ``obj`` (a spec-carrying dataclass instance) against its
+    declared field specs.
+
+    ``dims`` maps dim symbols to sizes (``{"W": 32, "T": 100}``); symbols
+    not present bind from the first field that uses them and must agree
+    everywhere after (so callers only pin the dims they care about).
+    Returns the fully resolved symbol table.  Raises ``SpecError`` listing
+    EVERY violation — dtype drift (incl. weak-typed arrays, the signature
+    of a silent ``x + 1.0`` promotion, unless ``allow_weak``), shape
+    mismatches, and inconsistent symbol bindings.
+
+    Fields whose value is itself a spec-carrying dataclass (nested layout
+    pytrees) are validated recursively against the same symbol table;
+    fields without a spec (static config scalars, dict-valued series) are
+    skipped.
+    """
+    resolved = dict(dims or {})
+    errors: list[str] = []
+    _check_into(obj, resolved, where or type(obj).__name__, errors, allow_weak)
+    if errors:
+        raise SpecError(
+            f"{len(errors)} spec violation(s):\n  " + "\n  ".join(errors)
+        )
+    return resolved
+
+
+def _check_into(
+    obj: Any, resolved: dict, where: str, errors: list, allow_weak: bool = False
+) -> None:
+    specs = field_specs(type(obj))
+    for f in dataclasses.fields(type(obj)):
+        name = f.name
+        value = getattr(obj, name)
+        label = f"{where}.{name}"
+        if name not in specs:
+            if dataclasses.is_dataclass(value) and field_specs(type(value)):
+                _check_into(value, resolved, label, errors, allow_weak)
+            continue
+        spec = specs[name]
+        try:
+            dtype, shape, weak = _leaf_info(value)
+        except SpecError as e:
+            errors.append(f"{label}: {e} (spec {spec})")
+            continue
+        if dtype != spec.dtype:
+            errors.append(
+                f"{label}: dtype {dtype}, spec says {spec} — "
+                "a silent promotion or a constructor/remapper drift"
+            )
+        elif weak and not allow_weak:
+            errors.append(
+                f"{label}: weak-typed {dtype} (spec {spec}) — built from a "
+                "python scalar; use an explicit jnp dtype so promotion "
+                "rules cannot flip it downstream"
+            )
+        if len(shape) != len(spec.dims):
+            errors.append(
+                f"{label}: rank {len(shape)} shape {shape}, spec says {spec}"
+            )
+            continue
+        for sym, actual in zip(spec.dims, shape):
+            if sym == "?":
+                continue
+            if isinstance(sym, int):
+                if actual != sym:
+                    errors.append(
+                        f"{label}: dim {actual} != literal {sym} (spec {spec})"
+                    )
+            elif sym in resolved:
+                if actual != resolved[sym]:
+                    errors.append(
+                        f"{label}: dim {sym}={actual} conflicts with "
+                        f"{sym}={resolved[sym]} bound earlier (spec {spec})"
+                    )
+            else:
+                resolved[sym] = actual
+
+
+def dims_for(cfg, tasks=None) -> dict:
+    """The canonical dim symbol table for a ``SimxConfig`` (+ optional
+    ``TaskArrays``): W/G/L/NG from the config, T/J from the trace.  R (the
+    reservation-queue cap) binds from the state's ``resq`` on first use."""
+    dims = {
+        "W": cfg.num_workers,
+        "G": cfg.num_gms,
+        "L": cfg.num_lms,
+        "NG": cfg.num_groups,
+    }
+    if tasks is not None:
+        dims["T"] = tasks.num_tasks
+        dims["J"] = tasks.num_jobs
+    return dims

@@ -73,6 +73,7 @@ from repro.simx.state import (
     SimxConfig,
     TaskArrays,
     init_eagle_state,
+    spec,
 )
 
 
@@ -100,11 +101,11 @@ class EagleLayout:
     central-match stages are always compiled in (a window may gain long
     jobs at any refill)."""
 
-    probes: ProbeLayout
-    off1: jax.Array       # int32[J]
-    off2: jax.Array       # int32[J]
-    long_fifo: jax.Array  # int32[T_cap + long_window]
-    n_long: jax.Array     # int32[]
+    probes: ProbeLayout   # nested spec'd pytree — checked recursively
+    off1: jax.Array = spec("int32[J]")
+    off2: jax.Array = spec("int32[J]")
+    long_fifo: jax.Array = spec("int32[?]")  # T_cap + long_window ids
+    n_long: jax.Array = spec("int32[]")
     long_window: int = dataclasses.field(metadata=dict(static=True))
 
 

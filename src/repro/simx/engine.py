@@ -231,6 +231,7 @@ def run_to_completion(
     remainder runner (``_run_tail``), so the state never advances past the
     budget (this is what makes an ``until`` horizon cap precise) and a
     near-boundary budget stays on the compiled fast path."""
+    runtime.check_round_budget(max_rounds, "run_to_completion(max_rounds=...)")
     run_chunk = runner if runner is not None else make_chunk_runner(step, chunk)
     rounds = 0
     while rounds < max_rounds:
@@ -266,6 +267,10 @@ def run_to_completion_telemetry(
     ``max_rounds`` exact — its trailing ``< stride`` rounds advance the
     state but are not sampled, same as ``scan_rounds_telemetry``."""
     from repro.simx import telemetry as tlm
+
+    runtime.check_round_budget(
+        max_rounds, "run_to_completion_telemetry(max_rounds=...)"
+    )
 
     stride = tel.stride
     chunk = max(stride, (chunk // stride) * stride)

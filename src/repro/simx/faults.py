@@ -57,6 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.simx.state import spec
+
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
@@ -67,12 +69,12 @@ class FaultSchedule:
     vmaps through ``simulate_fixed`` like any other traced input.
     """
 
-    worker_down: jax.Array      # float32[W] — crash time
-    worker_up: jax.Array        # float32[W] — recovery time (>= down)
-    gm_down: jax.Array          # float32[G] — GM down-window start (megha)
-    gm_up: jax.Array            # float32[G] — GM down-window end
-    hb_extra_rounds: jax.Array  # int32[] — heartbeat-delay perturbation,
-                                # in rounds added to the heartbeat period
+    worker_down: jax.Array = spec("float32[W]")  # crash time
+    worker_up: jax.Array = spec("float32[W]")    # recovery time (>= down)
+    gm_down: jax.Array = spec("float32[G]")  # GM down-window start (megha)
+    gm_up: jax.Array = spec("float32[G]")    # GM down-window end
+    hb_extra_rounds: jax.Array = spec("int32[]")  # heartbeat-delay
+                                # perturbation, rounds added to the period
 
     def replace(self, **kw) -> "FaultSchedule":
         return dataclasses.replace(self, **kw)

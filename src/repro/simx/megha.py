@@ -45,7 +45,13 @@ from repro.simx.runtime import (  # noqa: F401 — canonical home is runtime;
     MatchFn,                      # re-exported here for the existing call
     default_match_fn,             # sites (tests, benchmarks, engine)
 )
-from repro.simx.state import MeghaState, SimxConfig, TaskArrays, init_megha_state
+from repro.simx.state import (
+    MeghaState,
+    SimxConfig,
+    TaskArrays,
+    init_megha_state,
+    spec,
+)
 
 
 def gm_orders(key: jax.Array, cfg: SimxConfig) -> jax.Array:
@@ -86,8 +92,8 @@ class MeghaLayout:
     window C the rows were padded for.
     """
 
-    gm_tasks: jax.Array  # int32[G, tg_cap + window]
-    gm_len: jax.Array    # int32[G]
+    gm_tasks: jax.Array = spec("int32[G, ?]")  # rows: tg_cap + window
+    gm_len: jax.Array = spec("int32[G]")
     window: int = dataclasses.field(metadata=dict(static=True))
 
 

@@ -41,7 +41,13 @@ import numpy as np
 from repro.simx import runtime as rt
 from repro.simx.faults import FaultSchedule
 from repro.simx.runtime import MatchFn, default_match_fn
-from repro.simx.state import PigeonState, SimxConfig, TaskArrays, init_pigeon_state
+from repro.simx.state import (
+    PigeonState,
+    SimxConfig,
+    TaskArrays,
+    init_pigeon_state,
+    spec,
+)
 
 
 def task_groups(cfg: SimxConfig, tasks: TaskArrays) -> np.ndarray:
@@ -75,10 +81,10 @@ class PigeonLayout:
     change every refill).
     """
 
-    high_fifo: jax.Array  # int32[NG, Lh_cap + C]
-    low_fifo: jax.Array   # int32[NG, Ll_cap + C]
-    len_high: jax.Array   # int32[NG]
-    len_low: jax.Array    # int32[NG]
+    high_fifo: jax.Array = spec("int32[NG, ?]")  # rows: Lh_cap + C
+    low_fifo: jax.Array = spec("int32[NG, ?]")   # rows: Ll_cap + C
+    len_high: jax.Array = spec("int32[NG]")
+    len_low: jax.Array = spec("int32[NG]")
 
 
 def make_pigeon_step(

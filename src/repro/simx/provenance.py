@@ -49,7 +49,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.simx.state import TaskArrays
+from repro.simx.state import TaskArrays, spec
 
 #: sentinel for "round not reached yet" / "never placed"
 UNSET = -1
@@ -69,15 +69,15 @@ class Provenance:
     """Per-task lifecycle arrays (all ``int32[T]``; rounds are ``UNSET``
     until the event happens, placements ``UNSET`` until launched)."""
 
-    first_eligible_round: jax.Array   # submit time crossed the round clock
-    first_attempt_round: jax.Array    # first round the scheduler tried it
-    first_launch_round: jax.Array     # first launch (pre-fault-rework)
-    launch_round: jax.Array           # latest launch (== first w/o faults)
-    finish_round: jax.Array           # round its finish time passed
-    requeue_count: jax.Array          # fault re-pends (crash loss)
-    stale_retry_count: jax.Array      # stale-state retries (megha invalids)
-    placed_gm: jax.Array              # scheduling authority of last launch
-    placed_worker: jax.Array          # worker of last launch
+    first_eligible_round: jax.Array = spec("int32[T]")  # submit crossed clock
+    first_attempt_round: jax.Array = spec("int32[T]")   # first sched attempt
+    first_launch_round: jax.Array = spec("int32[T]")    # pre-fault-rework
+    launch_round: jax.Array = spec("int32[T]")  # latest (== first w/o faults)
+    finish_round: jax.Array = spec("int32[T]")  # finish time passed the clock
+    requeue_count: jax.Array = spec("int32[T]")  # fault re-pends (crash loss)
+    stale_retry_count: jax.Array = spec("int32[T]")  # stale-state retries
+    placed_gm: jax.Array = spec("int32[T]")      # authority of last launch
+    placed_worker: jax.Array = spec("int32[T]")  # worker of last launch
 
     def replace(self, **kw) -> "Provenance":
         import dataclasses

@@ -228,6 +228,48 @@ DispatchFn = Callable[..., dict]
 TELEMETRY_CORE_COUNTERS = ("messages", "probes", "inconsistencies", "lost")
 TELEMETRY_QUEUE_COUNTERS = ("res_overflow", "probe_lag")
 
+#: ``CoreState`` fields the RUNTIME advances inside ``compose_step`` —
+#: the time/round clock and the crash-loss accumulator.  A dispatch
+#: stage's update dict must never contain them (the runtime would fold
+#: the rule's write and then overwrite/double-advance it); the simxlint
+#: SC101 rule enforces this statically over every rule module.
+RUNTIME_OWNED_FIELDS = ("t", "rnd", "lost")
+
+#: The stage contract ``compose_step`` assembles, in execution order,
+#: with each stage's owner and the state fields it may write.  This is
+#: the machine-readable form of the module-docstring prose contract —
+#: ``repro.analysis.simxlint`` derives its dispatch-write rule from it
+#: and ``docs/simx_runtime.md`` renders it.
+STAGE_TABLE = (
+    # (stage,        owner,      writes)
+    ("faults",    "runtime", ("task_finish", "worker_finish", "lost")),
+    ("complete",  "runtime", ()),            # pure masks, no writes
+    ("dispatch",  "rule",    "any-but-runtime-owned"),
+    ("telemetry", "runtime", ()),            # derives deltas, no writes
+    ("metrics",   "runtime", ("t", "rnd", "lost")),
+)
+
+#: Round-index budget: ``rnd`` (and every lifecycle round in
+#: ``Provenance``) is int32, so a run may advance at most this many
+#: rounds before the counter would wrap.  Kept well under 2**31 -- 1 so
+#: round arithmetic (``rnd + heartbeat_rounds``, round -> seconds
+#: multiplies) cannot overflow either; ``engine``/``stream`` refuse
+#: budgets past it with a clear error instead of wrapping silently.
+MAX_ROUND_BUDGET = 2**31 - 2**20
+
+
+def check_round_budget(num_rounds: int, where: str = "scan_rounds") -> None:
+    """Fail fast when a static round budget would overflow the int32
+    round clock (a ~100-day steady-state span at dt=0.05 — reachable by a
+    mistyped ``horizon``/``max_rounds``, so refuse loudly)."""
+    if num_rounds > MAX_ROUND_BUDGET:
+        raise OverflowError(
+            f"{where}: {num_rounds} rounds exceeds the int32 round-clock "
+            f"budget ({MAX_ROUND_BUDGET}); the rnd counter and the "
+            "provenance lifecycle rounds would wrap silently. Split the "
+            "run or raise dt."
+        )
+
 
 def carry_state(carry):
     """The scheduler state leaf of a scan carry: under provenance the
@@ -304,7 +346,13 @@ def compose_step(
 
 
 def scan_rounds(step: Callable, state, num_rounds: int):
-    """Advance ``state`` by ``num_rounds`` rounds under one lax.scan."""
+    """Advance ``state`` by ``num_rounds`` rounds under one lax.scan.
+
+    ``num_rounds`` is static (a python int even under trace), so the
+    int32 round-clock overflow check is free here; the carried ``rnd``
+    itself may be a tracer and is checked by the host-side drivers
+    (``engine.run_to_completion``, ``stream.run_steady_state``)."""
+    check_round_budget(num_rounds)
     state, _ = jax.lax.scan(
         lambda s, _: (step(s), None), state, None, length=num_rounds
     )

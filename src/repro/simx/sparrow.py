@@ -60,6 +60,7 @@ from repro.simx.state import (
     TaskArrays,
     init_sparrow_state,
     probe_edge_layout,
+    spec,
 )
 
 
@@ -328,9 +329,9 @@ class ProbeLayout:
     static insertion width C the lists were padded for.
     """
 
-    edge_job: jax.Array     # int32[P_cap + window]
-    edge_worker: jax.Array  # int32[P_cap + window]
-    edge_end: jax.Array     # int32[J]
+    edge_job: jax.Array = spec("int32[?]")     # P_cap + window edges
+    edge_worker: jax.Array = spec("int32[?]")  # same length as edge_job
+    edge_end: jax.Array = spec("int32[J]")
     window: int = dataclasses.field(metadata=dict(static=True))
 
 

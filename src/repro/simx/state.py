@@ -47,19 +47,35 @@ from repro.workload.traces import Workload
 INF = jnp.float32(jnp.inf)
 
 
+def spec(text: str, **kw) -> dataclasses.Field:
+    """Declare a field's machine-readable shape/dtype contract.
+
+    ``spec("int32[W, R]")`` is ``dataclasses.field`` with the contract
+    string in the field metadata, where ``repro.analysis.specs`` (the
+    ``check_state`` validator and the speccheck CI gate) reads it.  Dim
+    symbols (W workers, G GMs, L LMs, NG groups, T tasks, J jobs, R
+    reservation slots) resolve against a per-run symbol table; ``?``
+    leaves a padded dim unconstrained; ``[]`` is a scalar.  Keeping the
+    string here — not in ``repro.analysis`` — means the contract lives
+    next to the declaration and ``simx`` never imports the analyzer."""
+    md = dict(kw.pop("metadata", {}))
+    md["spec"] = text
+    return dataclasses.field(metadata=md, **kw)
+
+
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class TaskArrays:
     """The workload as flat arrays (T tasks over J jobs, no padding)."""
 
-    job: jax.Array          # int32[T] — job position in submit order
-    duration: jax.Array     # float32[T]
-    submit: jax.Array       # float32[T] — the job's submission time
-    job_submit: jax.Array   # float32[J]
-    job_ideal: jax.Array    # float32[J] — IdealJCT = max task duration
-    job_ntasks: jax.Array   # int32[J]
-    job_est: jax.Array      # float32[J] — estimated runtime (Eagle/Pigeon
-                            # long/short classification; defaults to IdealJCT)
+    job: jax.Array = spec("int32[T]")          # job position in submit order
+    duration: jax.Array = spec("float32[T]")
+    submit: jax.Array = spec("float32[T]")     # the job's submission time
+    job_submit: jax.Array = spec("float32[J]")
+    job_ideal: jax.Array = spec("float32[J]")  # IdealJCT = max task duration
+    job_ntasks: jax.Array = spec("int32[J]")
+    job_est: jax.Array = spec("float32[J]")    # estimated runtime (Eagle/
+                            # Pigeon long/short split; defaults to IdealJCT)
 
     @property
     def num_tasks(self) -> int:
@@ -263,16 +279,17 @@ class CoreState:
     Rules subclass this with their private fields; ``_common_fields``
     initializes exactly these."""
 
-    t: jax.Array               # float32[] — simulated time at round start
-    rnd: jax.Array             # int32[]
-    task_finish: jax.Array     # float32[T] — inf until launched (= start+dur)
-    worker_finish: jax.Array   # float32[W] — free iff <= t
-    worker_task: jax.Array     # int32[W] — last task launched here (T = none)
-    inconsistencies: jax.Array  # int32[]
-    repartitions: jax.Array    # int32[]
-    messages: jax.Array        # int32[]
-    probes: jax.Array          # int32[]
-    lost: jax.Array            # int32[] — tasks lost to worker crashes
+    t: jax.Array = spec("float32[]")     # simulated time at round start
+    rnd: jax.Array = spec("int32[]")
+    task_finish: jax.Array = spec("float32[T]")   # inf until launched
+                                                  # (= start + duration)
+    worker_finish: jax.Array = spec("float32[W]")  # free iff <= t
+    worker_task: jax.Array = spec("int32[W]")  # last task launched (T = none)
+    inconsistencies: jax.Array = spec("int32[]")
+    repartitions: jax.Array = spec("int32[]")
+    messages: jax.Array = spec("int32[]")
+    probes: jax.Array = spec("int32[]")
+    lost: jax.Array = spec("int32[]")    # tasks lost to worker crashes
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -284,11 +301,11 @@ class QueueState(CoreState):
     """``CoreState`` plus the capped per-worker reservation-queue fields
     shared by the sparrow and eagle rules (see ``SparrowState``)."""
 
-    resq: jax.Array           # int32[W, R] — reservation queues (J = empty),
+    resq: jax.Array = spec("int32[W, R]")   # reservation queues (J = empty),
                               # compacted each round, ascending job id
-    probe_head: jax.Array     # int32[] — inserted prefix of the edge list
-    res_overflow: jax.Array   # int32[] — probes dropped on full queues
-    probe_lag: jax.Array      # int32[] — rounds the insertion window
+    probe_head: jax.Array = spec("int32[]")  # inserted edge-list prefix
+    res_overflow: jax.Array = spec("int32[]")  # probes dropped on full queues
+    probe_lag: jax.Array = spec("int32[]")  # rounds the insertion window
                               # saturated (arrival burst outran it)
 
 
@@ -297,10 +314,10 @@ class QueueState(CoreState):
 class MeghaState(CoreState):
     """Scan carry for the megha transition rule."""
 
-    head: jax.Array            # int32[G] — launched prefix of each GM's FIFO
-    worker_gm: jax.Array       # int32[W] — GM that scheduled the last task
-    worker_borrowed: jax.Array  # bool[W] — last task ran on a borrowed worker
-    view: jax.Array            # bool[G, W] — per-GM stale availability view
+    head: jax.Array = spec("int32[G]")  # launched prefix of each GM's FIFO
+    worker_gm: jax.Array = spec("int32[W]")  # GM that scheduled the last task
+    worker_borrowed: jax.Array = spec("bool[W]")   # last task was a borrow
+    view: jax.Array = spec("bool[G, W]")  # per-GM stale availability view
 
 
 def init_megha_state(cfg: SimxConfig, num_tasks: int) -> MeghaState:
@@ -348,7 +365,7 @@ class EagleState(QueueState):
     SSS long-running test: a worker runs long iff busy and its task's job
     is long."""
 
-    long_head: jax.Array     # int32[] — launched prefix of the central FIFO
+    long_head: jax.Array = spec("int32[]")  # launched central-FIFO prefix
 
 
 def init_eagle_state(cfg: SimxConfig, tasks: TaskArrays) -> EagleState:
@@ -370,9 +387,9 @@ def init_eagle_state(cfg: SimxConfig, tasks: TaskArrays) -> EagleState:
 class PigeonState(CoreState):
     """Scan carry for the pigeon transition rule."""
 
-    high_head: jax.Array     # int32[NG] — launched prefix of each group's
-    low_head: jax.Array      # int32[NG]   high/low-priority FIFO
-    since_low: jax.Array     # int32[NG] — WFQ: high tasks since the last low
+    high_head: jax.Array = spec("int32[NG]")  # launched prefix of each
+    low_head: jax.Array = spec("int32[NG]")   # group's high/low FIFO
+    since_low: jax.Array = spec("int32[NG]")  # WFQ: highs since the last low
 
 
 def init_pigeon_state(cfg: SimxConfig, num_tasks: int) -> PigeonState:
@@ -391,7 +408,7 @@ class OracleState(CoreState):
     """Scan carry for the omniscient-oracle rule: one global FIFO head —
     perfect knowledge needs no views, queues, or per-group state."""
 
-    head: jax.Array          # int32[] — launched prefix of the global FIFO
+    head: jax.Array = spec("int32[]")  # launched global-FIFO prefix
 
 
 def init_oracle_state(cfg: SimxConfig, num_tasks: int) -> OracleState:

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
@@ -795,6 +796,14 @@ def run_steady_state(
     """
     name = rule.lower()
     r = rt.get_rule(name)
+    rt.check_round_budget(max_rounds, "run_steady_state(max_rounds=...)")
+    if horizon is not None:
+        # the horizon is enforced in rounds via the int32 round clock, so
+        # it shares the same overflow budget
+        rt.check_round_budget(
+            int(math.ceil(horizon / (dt if cfg is None else cfg.dt))),
+            "run_steady_state(horizon=...)",
+        )
     if window_tasks is None:
         window_tasks = window_jobs * 16
     if cfg is None:

@@ -62,7 +62,7 @@ import numpy as np
 
 from repro.simx import runtime
 from repro.simx.faults import FaultSchedule, worker_dead
-from repro.simx.state import SimxConfig, TaskArrays
+from repro.simx.state import SimxConfig, TaskArrays, spec
 
 
 @dataclass(frozen=True)
@@ -111,9 +111,10 @@ class Timeline:
     final state's counters.
     """
 
-    t: jax.Array                   # float32[K] — simulated time per sample
-    series: dict                   # str -> [K] array (counters + gauges)
-    delay_hist: jax.Array          # int32[B] — finished-job delay histogram
+    t: jax.Array = spec("float32[K]")  # simulated time per sample
+    series: dict                       # str -> [K] array (counters + gauges);
+                                       # dict-valued, so no per-field spec
+    delay_hist: jax.Array = spec("int32[B]")  # finished-job delay histogram
     stride: int = dataclasses.field(metadata=dict(static=True), default=1)
     dt: float = dataclasses.field(metadata=dict(static=True), default=0.05)
     delay_max: float = dataclasses.field(metadata=dict(static=True), default=60.0)
@@ -333,12 +334,12 @@ class QuantileSketch:
     divided differences can hit a zero denominator).
     """
 
-    q: jax.Array        # float32[Q, 5] — marker heights
-    n: jax.Array        # float32[Q, 5] — integer marker positions (1-based)
-    npd: jax.Array      # float32[Q, 5] — desired marker positions
-    dn: jax.Array       # float32[Q, 5] — per-observation desired increment
-    buf: jax.Array      # float32[5]    — warm-up buffer (first 5 samples)
-    count: jax.Array    # int32[]       — observations absorbed
+    q: jax.Array = spec("float32[Q, 5]")    # marker heights
+    n: jax.Array = spec("float32[Q, 5]")    # integer marker pos (1-based)
+    npd: jax.Array = spec("float32[Q, 5]")  # desired marker positions
+    dn: jax.Array = spec("float32[Q, 5]")   # per-obs desired increment
+    buf: jax.Array = spec("float32[5]")     # warm-up buffer (first 5 obs)
+    count: jax.Array = spec("int32[]")      # observations absorbed
     targets: tuple = dataclasses.field(
         metadata=dict(static=True), default=DEFAULT_QUANTILES
     )

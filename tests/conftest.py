@@ -18,3 +18,18 @@ def require_or_skip_hypothesis():
         import hypothesis  # noqa: F401 — ImportError here IS the failure
     else:
         pytest.importorskip("hypothesis")
+
+
+import pytest  # noqa: E402 — after the sys.path insert above
+
+
+@pytest.fixture
+def compile_sentinel():
+    """Recompile/tracer-leak sentinel for any suite: yields the
+    ``repro.analysis.sentinels`` module so tests can count compilations
+    (``with compile_sentinel.count_compiles() as c:``) or assert the
+    compile-once contract (``compile_sentinel.assert_compiles_once(fn)``)
+    without importing the analysis package themselves."""
+    from repro.analysis import sentinels
+
+    return sentinels

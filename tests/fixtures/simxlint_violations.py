@@ -1,0 +1,145 @@
+"""Seeded simxlint violations — one per rule code, plus suppressed twins.
+
+This file is a LINT FIXTURE, not production code: ``tests/test_analysis.py``
+runs ``repro.analysis.simxlint`` over it and asserts each rule fires at
+the marked line and that every ``# simxlint: disable=`` twin stays
+silent.  It is never imported by the test suite (no ``test_`` prefix,
+module never executed) and is kept clean under ruff's critical rules
+(E9, F63, F7, F82) so the repo-wide ruff gate stays green.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- JH001/JH002/JH003: jit-hostile bodies ----------------------------------
+
+
+@jax.jit
+def traced_branching(x):
+    if jnp.any(x > 0):  # JH001
+        x = x + 1
+    while jnp.sum(x) < 10:  # JH002
+        x = x * 2
+    return x
+
+
+@partial(jax.jit, static_argnums=(1,))
+def host_syncs(x, n):
+    a = x.item()  # JH003 (.item)
+    b = float(x)  # JH003 (float of traced)
+    c = np.max(x)  # JH003 (np.* of traced)
+    _ = n + 1  # static arg arithmetic is fine, but x leaks above
+    return a + b + c
+
+
+@jax.jit
+def suppressed_sync(x):
+    # a deliberate, documented host pull — the disable twin must be silent
+    v = float(x)  # simxlint: disable=JH003
+    return v
+
+
+def make_fake_step(cfg):
+    def step(state):  # jit scope: returned by a builder
+        if jnp.all(state > 0):  # JH001
+            return state
+        return state - 1
+
+    def host_helper(rows):  # NOT jit scope: only called at build time
+        if np.all(np.asarray(rows) > 0):  # silent — host numpy on host data
+            return rows
+        return rows
+
+    host_helper(cfg)
+    return step
+
+
+# -- RC101: per-call jit construction ---------------------------------------
+
+
+def per_call_jit(f, x):
+    return jax.jit(f)(x)  # RC101 (immediately-invoked)
+
+
+def loop_jit(f, xs):
+    out = []
+    for x in xs:
+        g = jax.jit(f)  # RC101 (fresh callable per iteration)
+        out.append(g(x))
+    return out
+
+
+def hoisted_jit_ok(f, xs):
+    g = jax.jit(f)  # silent — built once, reused below
+    return [g(x) for x in xs]
+
+
+# -- PT101: unregistered pytree dataclass -----------------------------------
+
+
+@dataclass(frozen=True)
+class UnregisteredCarry:  # PT101
+    t: jax.Array
+    rnd: jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class RegisteredCarry:  # silent
+    t: jax.Array
+    rnd: jax.Array
+
+
+@dataclass(frozen=True)
+class PlainConfig:  # silent — no array fields, not a pytree carry
+    num_workers: int
+    dt: float
+
+
+# -- SC101: dispatch writing runtime-owned fields ---------------------------
+
+
+def make_bad_rule_step(cfg):
+    def dispatch(s, t, task_finish0, worker_finish0, free, comp, lost_w):
+        updates = dict(
+            task_finish=task_finish0,
+            rnd=s.rnd + 1,  # SC101 — the metrics stage owns rnd
+        )
+        updates["t"] = t + 1.0  # SC101 — the metrics stage owns t
+        return updates
+
+    return dispatch
+
+
+def make_good_rule_step(cfg):
+    def dispatch(s, t, task_finish0, worker_finish0, free, comp, lost_w):
+        return dict(task_finish=task_finish0, worker_finish=worker_finish0)
+
+    return dispatch
+
+
+# -- SC102: incomplete rule registration ------------------------------------
+
+
+class Rule:
+    def __init__(self, **kw):
+        self.__dict__.update(kw)
+
+
+def register_rule(rule):
+    return rule
+
+
+def _init(cfg, tasks):
+    return None
+
+
+BAD_RULE = register_rule(Rule(name="bad", init=_init))  # SC102 (no build_step)
+GOOD_RULE = register_rule(
+    Rule(name="good", init=_init, build_step=make_good_rule_step)
+)  # silent

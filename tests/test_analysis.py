@@ -1,0 +1,327 @@
+"""The static-analysis gate, tested end to end: the spec grammar and
+``check_state`` validator, the simxlint rules over the seeded violation
+fixture (``tests/fixtures/simxlint_violations.py``), the round-budget
+overflow guards, the speccheck cross-check, and the dynamic sentinels —
+compile-once and tracer-leak — over every registered rule on both the
+chunked fixed-trace path and the streaming steady-state path."""
+
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import simxlint, speccheck, specs
+from repro.analysis.specs import SpecError, check_state, dims_for, parse_spec
+from repro.simx import engine
+from repro.simx import runtime as rt
+from repro.simx import stream
+from repro.simx.state import SimxConfig, export_workload
+from repro.workload.synth import PoissonArrivals, synthetic_trace
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURE = REPO / "tests" / "fixtures" / "simxlint_violations.py"
+
+RULES = sorted(rt.RULES)
+
+
+@pytest.fixture(scope="module")
+def small():
+    """The same tiny instance speccheck drives: W=32 spans megha's 2x2
+    grid, pigeon's groups, and eagle's short partition."""
+    cfg = SimxConfig(num_workers=32, num_gms=2, num_lms=2, group_size=16)
+    wl = synthetic_trace(num_jobs=8, tasks_per_job=3, load=0.5, num_workers=32, seed=0)
+    return cfg, export_workload(wl)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: spec grammar + check_state
+# ---------------------------------------------------------------------------
+
+
+def test_parse_spec_grammar():
+    s = parse_spec("int32[W, R]")
+    assert s.dtype == "int32" and s.dims == ("W", "R")
+    assert parse_spec("float32[]").dims == ()          # scalar
+    assert parse_spec("bool[G, W]").dtype == "bool"
+    assert parse_spec("int32[NG, ?]").dims == ("NG", "?")  # wildcard dim
+    assert parse_spec("float32[Q, 5]").dims == ("Q", 5)    # literal dim
+
+
+@pytest.mark.parametrize(
+    "bad", ["int32", "int32[", "[W]", "int32[W,, R]", "int 32[W]", ""]
+)
+def test_parse_spec_rejects_malformed(bad):
+    with pytest.raises(SpecError):
+        parse_spec(bad)
+
+
+def test_check_state_accepts_on_spec_states(small):
+    cfg, tasks = small
+    dims = dims_for(cfg, tasks)
+    check_state(tasks, dict(dims), where="TaskArrays")
+    for name in RULES:
+        check_state(rt.get_rule(name).init(cfg, tasks), dict(dims), where=name)
+
+
+def test_check_state_catches_seeded_dtype_drift(small):
+    cfg, tasks = small
+    state = rt.get_rule("megha").init(cfg, tasks)
+    bad = dataclasses.replace(state, rnd=state.rnd.astype(jnp.float32))
+    with pytest.raises(SpecError, match=r"rnd"):
+        check_state(bad, dims_for(cfg, tasks))
+
+
+def test_check_state_catches_weak_type_promotion(small):
+    # the classic silent failure: `x + 1.0` on an int32 field promotes to
+    # WEAK float32 — right value, wrong aval, one recompile per call
+    cfg, tasks = small
+    state = rt.get_rule("megha").init(cfg, tasks)
+    weak_t = jnp.sin(0.0)  # float32[] like state.t, but weak_type=True
+    assert weak_t.weak_type
+    bad = dataclasses.replace(state, t=weak_t)
+    with pytest.raises(SpecError, match=r"weak"):
+        check_state(bad, dims_for(cfg, tasks))
+    # ... and the escape hatch is explicit
+    check_state(bad, dims_for(cfg, tasks), allow_weak=True)
+
+
+def test_check_state_catches_shape_drift(small):
+    cfg, tasks = small
+    state = rt.get_rule("megha").init(cfg, tasks)
+    bad = dataclasses.replace(state, worker_finish=state.worker_finish[:-1])
+    with pytest.raises(SpecError, match=r"worker_finish"):
+        check_state(bad, dims_for(cfg, tasks))
+
+
+def test_check_state_reports_every_violation_at_once(small):
+    cfg, tasks = small
+    state = rt.get_rule("megha").init(cfg, tasks)
+    bad = dataclasses.replace(
+        state,
+        rnd=state.rnd.astype(jnp.float32),
+        lost=state.lost.astype(jnp.float32),
+    )
+    with pytest.raises(SpecError) as e:
+        check_state(bad, dims_for(cfg, tasks))
+    msg = str(e.value)
+    assert "rnd" in msg and "lost" in msg  # one error lists ALL violations
+
+
+def test_speccheck_cross_check_passes():
+    rep = speccheck.run_all()
+    assert rep.failures == 0, [r for r in rep.results if not r["ok"]]
+
+
+# ---------------------------------------------------------------------------
+# layer 2: simxlint over the seeded fixture
+# ---------------------------------------------------------------------------
+
+#: every finding the fixture must produce, as (code, line) — the comments
+#: in the fixture mark each seeded violation
+EXPECTED = [
+    ("JH001", 24), ("JH002", 26),
+    ("JH003", 33), ("JH003", 34), ("JH003", 35),
+    ("JH001", 49),
+    ("RC101", 66), ("RC101", 72),
+    ("PT101", 86),
+    ("SC101", 109), ("SC101", 113),
+    ("SC102", 142),
+]
+
+
+def test_lint_fixture_fires_every_rule():
+    got = [(f.code, f.line) for f in simxlint.lint_paths([FIXTURE])]
+    assert got == EXPECTED
+
+
+def test_lint_fixture_suppression_and_clean_twins_stay_silent():
+    findings = simxlint.lint_paths([FIXTURE])
+    src = FIXTURE.read_text().splitlines()
+    flagged = {f.line for f in findings}
+    # the `# simxlint: disable=JH003` line and every `# silent` twin
+    silent = {
+        i + 1
+        for i, line in enumerate(src)
+        if "simxlint: disable=" in line or "# silent" in line
+    }
+    assert silent, "fixture lost its suppressed/clean twins"
+    assert not flagged & silent
+
+
+def test_lint_file_level_disable(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "# simxlint: disable-file=JH003\n"
+        "import jax\n"
+        "@jax.jit\n"
+        "def g(x):\n"
+        "    return float(x)\n"
+    )
+    assert simxlint.lint_paths([f]) == []
+    # without the header the same body fires
+    g = tmp_path / "mod2.py"
+    g.write_text("import jax\n@jax.jit\ndef g(x):\n    return float(x)\n")
+    assert [x.code for x in simxlint.lint_paths([g])] == ["JH003"]
+
+
+def test_lint_syntax_error_is_a_finding_not_a_crash(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def oops(:\n")
+    codes = [x.code for x in simxlint.lint_paths([f])]
+    assert codes == ["E000"]
+
+
+def test_lint_finding_format_is_file_line_code():
+    f = simxlint.lint_paths([FIXTURE])[0]
+    assert str(f) == f"{f.file}:{f.line}: {f.code} {f.message}"
+
+
+def test_lint_cli_exit_codes(tmp_path, capsys):
+    # 0 on the real runtime + benchmarks (the repo lints clean)
+    assert simxlint.main([str(REPO / "src/repro/simx"), str(REPO / "benchmarks")]) == 0
+    # 1 on the fixture, with file:line findings on stdout
+    assert simxlint.main([str(FIXTURE)]) == 1
+    out = capsys.readouterr().out
+    assert f"{FIXTURE}:24: JH001" in out
+    # 2 on usage errors
+    assert simxlint.main([]) == 2
+    assert simxlint.main([str(tmp_path / "nope.txt")]) == 2
+
+
+def test_lint_cli_report_artifact(tmp_path):
+    rpt = tmp_path / "lint.json"
+    assert simxlint.main([str(FIXTURE), "--report", str(rpt)]) == 1
+    import json
+
+    data = json.loads(rpt.read_text())
+    assert [(d["code"], d["line"]) for d in data] == EXPECTED
+
+
+def test_runtime_stage_table_matches_linter_contract():
+    # the linter's SC101 contract is DERIVED from the runtime, not copied
+    assert simxlint._runtime_owned_fields() == tuple(rt.RUNTIME_OWNED_FIELDS)
+    stages = [s[0] for s in rt.STAGE_TABLE]
+    assert stages == ["faults", "complete", "dispatch", "telemetry", "metrics"]
+    owner = dict((s[0], s[1]) for s in rt.STAGE_TABLE)
+    assert owner["dispatch"] == "rule"  # the only rule-owned stage
+
+
+# ---------------------------------------------------------------------------
+# round-budget overflow guards
+# ---------------------------------------------------------------------------
+
+
+def test_round_budget_boundary():
+    rt.check_round_budget(rt.MAX_ROUND_BUDGET)  # exactly at the cap: fine
+    with pytest.raises(OverflowError, match="int32"):
+        rt.check_round_budget(rt.MAX_ROUND_BUDGET + 1)
+
+
+def test_scan_rounds_rejects_overflowing_budget():
+    with pytest.raises(OverflowError):
+        rt.scan_rounds(lambda s: s, None, 2**31)
+
+
+def test_run_to_completion_rejects_overflowing_budget():
+    with pytest.raises(OverflowError, match="max_rounds"):
+        engine.run_to_completion(lambda s: s, None, max_rounds=2**31)
+
+
+def test_run_steady_state_rejects_overflowing_budget():
+    arr = PoissonArrivals(rate=1.0, seed=0, num_jobs=4)
+    with pytest.raises(OverflowError, match="max_rounds"):
+        stream.run_steady_state("megha", arr, 32, max_rounds=2**31)
+    with pytest.raises(OverflowError, match="horizon"):
+        stream.run_steady_state("megha", arr, 32, horizon=1e12, dt=0.05)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: dynamic sentinels over every registered rule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", RULES)
+def test_compile_once_chunked(small, name, compile_sentinel):
+    """One build_step + one chunk runner serve every run: a second
+    identical run_to_completion must compile NOTHING new."""
+    cfg, tasks = small
+    rule = rt.get_rule(name)
+    step = rule.build_step(cfg, tasks, jax.random.PRNGKey(0))
+    runner = engine.make_chunk_runner(step, chunk=64)
+
+    def run():
+        final = engine.run_to_completion(
+            step, rule.init(cfg, tasks), chunk=64, max_rounds=4096, runner=runner
+        )
+        assert bool(jnp.all(jnp.isfinite(final.task_finish)))
+
+    compile_sentinel.assert_compiles_once(run, label=f"chunked[{name}]")
+
+
+@pytest.mark.parametrize("name", RULES)
+def test_compile_once_streamed(name, compile_sentinel):
+    """The streaming promise from PR 7, now asserted: one compiled
+    segment per (rule, cfg, rounds_per_refill) — every refill and every
+    repeat run re-enters the cached segment with identical avals."""
+
+    def run():
+        out = stream.run_steady_state(
+            name,
+            PoissonArrivals(rate=20.0, seed=0, num_jobs=12),
+            32,
+            window_jobs=8,
+            rounds_per_refill=16,
+            max_rounds=4096,
+            num_gms=2,
+            num_lms=2,
+            collect_delays=True,
+        )
+        assert out.jobs_completed == 12
+
+    compile_sentinel.assert_compiles_once(run, label=f"streamed[{name}]")
+
+
+def test_default_segment_is_cached_per_config(small):
+    cfg = stream.stream_config("megha", 32, window_tasks=64, num_gms=2, num_lms=2)
+    a = stream._default_segment("megha", cfg, 16, telemetry=None, stride=1,
+                                provenance=False)
+    b = stream._default_segment("megha", cfg, 16, telemetry=None, stride=1,
+                                provenance=False)
+    assert a is b  # lru_cache hit — the object identity IS the contract
+
+
+def test_no_tracer_leaks_through_a_full_run(small, compile_sentinel):
+    cfg, tasks = small
+    rule = rt.get_rule("megha")
+    step = rule.build_step(cfg, tasks, jax.random.PRNGKey(0))
+    with compile_sentinel.assert_no_tracer_leaks():
+        final = engine.run_to_completion(step, rule.init(cfg, tasks), chunk=32)
+    assert bool(jnp.all(jnp.isfinite(final.task_finish)))
+
+
+def test_count_compiles_counts_and_stays_quiet(compile_sentinel, capsys):
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    x = jnp.arange(7)
+    with compile_sentinel.count_compiles() as c:
+        f(x)
+    assert c.count >= 1 and c.what  # the cold call compiled, and says what
+    with compile_sentinel.count_compiles() as c2:
+        f(x)
+    assert c2.count == 0  # warm cache
+    assert "Compiling" not in capsys.readouterr().err  # muted while counting
+
+
+def test_missing_specs_flags_unannotated_arrays():
+    @dataclasses.dataclass
+    class Gappy:
+        a: jax.Array = dataclasses.field(
+            default=None, metadata={"spec": "int32[W]"}
+        )
+        b: "jax.Array" = None  # array-annotated, no spec
+
+    assert specs.missing_specs(Gappy) == ["b"]

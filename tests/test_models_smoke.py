@@ -37,7 +37,8 @@ def test_arch_smoke_forward_and_train_step(arch):
 
     step = TL.make_train_step(cfg, O.OptConfig(lr=1e-3))
     state = {"params": params, "opt": O.init_opt_state(params, O.OptConfig())}
-    state, metrics = jax.jit(step)(state, batch)
+    jit_step = jax.jit(step)
+    state, metrics = jit_step(state, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert np.isfinite(float(metrics["grad_norm"]))
     assert int(metrics["step"]) == 1

@@ -123,9 +123,10 @@ def test_determinism_across_identical_seeds(small, mod):
 def test_vmap_over_seeds(small, mod):
     cfg, tasks, rounds = small
     seeds = jnp.arange(3)
-    fin = jax.jit(
+    run = jax.jit(
         jax.vmap(lambda s: mod.simulate_fixed(cfg, tasks, s, rounds).task_finish)
-    )(seeds)
+    )
+    fin = run(seeds)
     assert fin.shape == (3, tasks.num_tasks)
     # every seed finishes the whole workload inside the horizon
     assert bool(jnp.all(jnp.isfinite(fin)))

@@ -33,6 +33,7 @@ from repro.simx import (
     export_workload,
     runtime,
 )
+from repro.analysis.specs import check_state, dims_for
 from repro.simx import oracle as simx_oracle
 from repro.simx import sweep as simx_sweep
 from repro.workload.synth import synthetic_trace
@@ -261,8 +262,12 @@ def check_conservation_and_oracle_bound(
     faults = _prop_faults(fraction, fault_seed)
     rounds = engine.estimate_rounds(cfg, tasks, slack=8.0) + int(4.0 / cfg.dt)
     summaries = {}
+    spec_dims = dims_for(cfg, tasks)
     for name in engine.SCHEDULERS:
         final, ys = _per_round_counts(name, cfg, tasks, rounds, faults)
+        # the final state still matches its declared shape/dtype contracts
+        # (catches promotion drift the numeric assertions below can't see)
+        check_state(final, dict(spec_dims), where=f"final[{name}]")
         done, launched, lost = ys[:, 0], ys[:, 1], ys[:, 2]
         # accounting balances every round
         running = launched - done
