@@ -73,10 +73,31 @@ Two sections:
    runs megha / sparrow / oracle; ``--full`` runs every registered rule
    at more loads.  Recipe and how to read the rows: docs/steady_state.md.
 
+8. **Mesh-sharded rows** (``--sharded``; ``--only-sharded`` is the CI
+   smoke entrypoint) — the ``repro.simx.shard`` drivers: the Fig. 2 grid
+   and a steady-state load pair run once on a 1-device mesh and once
+   across every visible device, recording ``n_devices``, warm per-device
+   wall time, and the measured scaling efficiency vs the 1-device path.
+   CI forces 8 CPU devices (``XLA_FLAGS=--xla_force_host_platform_
+   device_count=8``) on one physical core, so the recorded efficiency
+   there measures partitioning overhead, not speedup — on real
+   multi-chip hosts the same rows show the scale-out.  Recipe:
+   docs/sharded_sweeps.md.
+
+9. **Donation row** (always on) — ``simx_donation`` times the megha
+   chunk runner and a small sweep grid with and without buffer donation
+   (``donate_argnums``) and records the wall deltas plus the compiled
+   programs' temp-memory figures where XLA reports them.
+
 Every invocation also merges its rows into ``BENCH_simx.json`` — a JSON
 array keyed by (git rev, bench name), the machine-readable trajectory
 that makes speed/overhead regressions diffable across PRs (disable with
-``--bench-json none``).
+``--bench-json none``).  Unless ``--no-compile-cache`` is passed, the
+persistent JAX compilation cache is enabled (``JAX_COMPILE_CACHE_DIR``
+or ``.jax_compile_cache``) so bench reruns and CI smoke steps stop
+paying the per-rule recompile; the point-ladder rows report
+``compile_s`` (cold, first build) next to ``compile_warm_s`` (a fresh
+AOT build of the same program, which hits the persistent cache).
 """
 
 from __future__ import annotations
@@ -119,8 +140,48 @@ FAULTS_FULL = dict(
     num_jobs=100, tasks_per_job=500, outage=5.0, gm_outages=2, dt=0.05,
 )
 
+#: Mesh-sharded fig2 grid shapes for section 8 (``--sharded``): small
+#: enough to compile fast under 8 forced CPU devices, uneven on purpose
+#: (15 and 24 points) so the pad-and-mask path is always exercised.
+SHARDED = dict(
+    loads=(0.35, 0.55, 0.7, 0.85, 0.95), num_seeds=3, num_workers=64,
+    num_jobs=6, tasks_per_job=8, dt=0.05, num_gms=2, num_lms=2,
+)
+SHARDED_FULL = dict(
+    loads=(0.2, 0.4, 0.6, 0.8, 0.9, 0.95), num_seeds=4, num_workers=1024,
+    num_jobs=32, tasks_per_job=64, dt=0.05,
+)
+#: Steady-state lane batch for the ``simx_steady_sharded`` row.
+SHARDED_STEADY = dict(
+    num_workers=64, loads=(0.5, 0.9), num_jobs=24, tasks_per_job=8,
+    window_jobs=16, window_tasks=128, rounds_per_refill=16,
+    num_gms=2, num_lms=2,
+)
+
 #: This invocation's machine-readable rows (mirrors the printed CSV).
 _BENCH_ROWS: list[dict] = []
+
+
+def enable_compile_cache(path: str | None = None) -> str:
+    """Point jax at a persistent on-disk compilation cache so re-runs of
+    the bench skip XLA compiles entirely (``compile_s`` cold vs
+    ``compile_warm_s`` warm in the dc rows).  Path resolution:
+    explicit arg > ``$JAX_COMPILE_CACHE_DIR`` > ``.jax_compile_cache``.
+    The thresholds are zeroed because bench programs are many small
+    scans — the default 1s/min-size gates would skip all of them."""
+    import os
+
+    path = path or os.environ.get("JAX_COMPILE_CACHE_DIR") or ".jax_compile_cache"
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    # jax latches cache-enablement on the FIRST compile of the process —
+    # any import-time jit before this call would pin "disabled" for good;
+    # reset the latch so the next compile re-checks the config above
+    from jax._src import compilation_cache
+
+    compilation_cache.reset_cache()
+    return path
 
 
 def _record(name: str, us: float, **derived) -> str:
@@ -195,13 +256,22 @@ def _simx_point(wl, workers: int, dt: float) -> dict:
     t0 = time.time()
     jax.block_until_ready(runner(state0))
     compile_wall = time.time() - t0
+    # warm AOT rebuild of the same program: re-lowers and recompiles from
+    # scratch in-process, so with the persistent compile cache enabled
+    # this times a cache hit (and without it, a full recompile)
+    t0 = time.time()
+    runner.lower(state0).compile()
+    compile_warm = time.time() - t0
     t0 = time.time()
     state = sxe.run_to_completion(
         step, state0, chunk=32, max_rounds=cap, runner=runner
     )
     wall = time.time() - t0
     done = int((state.task_finish <= state.t).sum())
-    return {"wall": wall, "compile": compile_wall, "done": done}
+    return {
+        "wall": wall, "compile": compile_wall,
+        "compile_warm": compile_warm, "done": done,
+    }
 
 
 def _sweep_rows(full: bool) -> list[str]:
@@ -539,6 +609,167 @@ def _breakdown_rows() -> list[str]:
 
 
 #: Section 7: the steady-state streaming grid (smoke / --full tiers).
+def _donation_row() -> list[str]:
+    """Section 9: buffer-donation deltas.  Times the megha chunk runner
+    and a small fig2 sweep grid with and without ``donate_argnums`` on
+    the carried state / grid buffers, and records the XLA-reported
+    temp-allocation sizes where the backend exposes them.  On CPU,
+    donation is typically a no-op (XLA ignores the aliasing hint), so
+    the row mostly documents that the knob is wired and free."""
+    import warnings
+
+    from repro.simx.state import init_megha_state as _init
+
+    workers = 256
+    wl = _trace(workers)
+    cfg = SimxConfig(num_workers=workers, dt=0.05)
+    tasks = export_workload(wl)
+    step = sxm.make_megha_step(
+        cfg, tasks, sxm.gm_orders(jax.random.PRNGKey(0), cfg)
+    )
+    cap = sxe.estimate_rounds(cfg, tasks)
+    derived: dict = {}
+    walls: dict = {}
+    with warnings.catch_warnings():
+        # CPU backends warn that donated buffers were not usable
+        warnings.simplefilter("ignore")
+        for tag, donate in (("nodonate", False), ("donate", True)):
+            runner = sxe.make_chunk_runner(step, chunk=32, donate=donate)
+            jax.block_until_ready(runner(_init(cfg, tasks.num_tasks)))
+            t0 = time.time()
+            sxe.run_to_completion(
+                step, _init(cfg, tasks.num_tasks), chunk=32,
+                max_rounds=cap, runner=runner,
+            )
+            walls[tag] = time.time() - t0
+            derived[f"wall_{tag}_s"] = round(walls[tag], 3)
+            try:
+                mem = (
+                    runner.lower(_init(cfg, tasks.num_tasks))
+                    .compile().memory_analysis()
+                )
+                derived[f"temp_mb_{tag}"] = round(
+                    mem.temp_size_in_bytes / 2**20, 2
+                )
+            except Exception:
+                derived[f"temp_mb_{tag}"] = "na"
+        # the vmapped sweep grid: donated submit/job_submit grids.  A
+        # fresh plan per run — donation consumes the grid buffers.
+        sweep_spec = dict(
+            loads=(0.4, 0.8), num_seeds=2, num_workers=256, num_jobs=8,
+            tasks_per_job=16, dt=0.05,
+        )
+        for tag, donate in (("nodonate", False), ("donate", True)):
+            plan = sxs.fig2_plan("megha", **sweep_spec)
+            t0 = time.time()
+            jax.block_until_ready(sxs.sweep_grid(
+                plan.name, plan.cfg, plan.tasks, plan.submit_grid,
+                plan.job_submit_grid, plan.seeds, plan.num_rounds,
+                match_fn=plan.match_fn, pick_fn=plan.pick_fn, donate=donate,
+            ))
+            derived[f"sweep_wall_{tag}_s"] = round(time.time() - t0, 3)
+    saved = walls["nodonate"] - walls["donate"]
+    derived["wall_delta_pct"] = round(100.0 * saved / max(walls["nodonate"], 1e-9), 1)
+    return [_record("simx_donation", walls["donate"] * 1e6, **derived)]
+
+
+def _sharded_rows(full: bool = False) -> list[str]:
+    """Section 8 (``--sharded``): the mesh-sharded drivers against their
+    single-device selves.  One ``fig2_plan`` per scheduler feeds both a
+    1-device and an all-devices ``sharded_grid_program`` (identical
+    inputs, identical outputs — parity is pinned by
+    ``tests/test_simx_shard.py``); the row records the device count, the
+    warm per-sweep walls, and ``scaling_efficiency = wall_1dev /
+    (n_devices * wall_ndev)`` — ~1.0 means perfect scaling on real
+    device fleets, ~1/n on the 1-physical-core CI hosts that force 8
+    virtual CPU devices.  A ``simx_steady_sharded`` row does the same
+    for the lane-batched steady-state driver."""
+    from repro.simx import shard as sxsh
+    from repro.simx.stream import run_steady_state
+    from repro.workload.synth import PoissonArrivals, fixed_job_factory
+
+    spec = dict(SHARDED_FULL if full else SHARDED)
+    schedulers = sxe.SCHEDULERS if full else ("megha", "sparrow")
+    n_dev = jax.device_count()
+    rows = []
+    for sched in schedulers:
+        plan = sxs.fig2_plan(sched, **spec)
+        pts = len(spec["loads"]) * spec["num_seeds"]
+        walls = {}
+        for nd in dict.fromkeys((1, n_dev)):  # 1 first; dedup if n_dev == 1
+            prog = sxsh.sharded_grid_program(
+                plan.name, plan.cfg, plan.tasks, plan.submit_grid,
+                plan.job_submit_grid, plan.seeds, plan.num_rounds,
+                mesh=sxsh.sweep_mesh(nd),
+                match_fn=plan.match_fn, pick_fn=plan.pick_fn,
+            )
+            t0 = time.time()
+            jax.block_until_ready(prog())
+            cold = time.time() - t0
+            t0 = time.time()
+            jax.block_until_ready(prog())
+            walls[nd] = (cold, time.time() - t0)
+        warm1 = walls[1][1]
+        cold_n, warm_n = walls[n_dev]
+        rows.append(_record(
+            f"simx_fig2_sharded_{sched}", warm_n * 1e6 / pts,
+            n_devices=n_dev,
+            wall_s=round(warm_n, 3),
+            wall_1dev_s=round(warm1, 3),
+            compile_s=round(max(cold_n - warm_n, 0.0), 3),
+            scaling_efficiency=round(warm1 / max(n_dev * warm_n, 1e-9), 3),
+            grid=f"{len(spec['loads'])}x{spec['num_seeds']}",
+            rounds=int(plan.annotate["num_rounds"]),
+        ))
+    # lane-batched steady state: serial per-load runs vs one mesh batch.
+    # Arrival processes are single-use generators — build fresh ones per
+    # driver via the factory.
+    st = SHARDED_STEADY
+    demand = float(st["tasks_per_job"])
+    kw = dict(
+        window_jobs=st["window_jobs"], window_tasks=st["window_tasks"],
+        rounds_per_refill=st["rounds_per_refill"],
+        num_gms=st["num_gms"], num_lms=st["num_lms"],
+    )
+
+    def mk(load):
+        return PoissonArrivals(
+            rate=load * st["num_workers"] / demand,
+            job_factory=fixed_job_factory(st["tasks_per_job"], 1.0),
+            seed=7, num_jobs=st["num_jobs"],
+        )
+
+    t0 = time.time()
+    serial = [
+        run_steady_state("megha", mk(ld), st["num_workers"], **kw)
+        for ld in st["loads"]
+    ]
+    wall_serial = time.time() - t0
+    t0 = time.time()
+    batched = sxsh.sharded_steady_state(
+        "megha", [mk(ld) for ld in st["loads"]], st["num_workers"],
+        mesh=sxsh.sweep_mesh(min(n_dev, len(st["loads"]))), **kw,
+    )
+    wall_sharded = time.time() - t0
+    done = sum(r.tasks_completed for r in batched)
+    total = sum(r.tasks_admitted for r in serial)
+    rows.append(_record(
+        "simx_steady_sharded", wall_sharded * 1e6 / max(total, 1),
+        n_devices=n_dev,
+        lanes=len(st["loads"]),
+        wall_s=round(wall_sharded, 3),
+        wall_serial_s=round(wall_serial, 3),
+        scaling_efficiency=round(
+            wall_serial / max(len(st["loads"]) * wall_sharded, 1e-9), 3
+        ),
+        done=f"{done}/{total}",
+        p999_top=round(
+            float(batched[-1].quantile(0.999)), 3
+        ),
+    ))
+    return rows
+
+
 STEADY = dict(
     num_workers=256, loads=(0.5, 0.9), schedulers=("megha", "sparrow", "oracle"),
     num_jobs=96, tasks_per_job=8, window_jobs=80, window_tasks=640,
@@ -625,6 +856,7 @@ def run(
     trace: bool = False,
     breakdown: bool = False,
     steady: bool = False,
+    sharded: bool = False,
     trace_out: str = "simx_trace.json",
     bench_json: str | None = "BENCH_simx.json",
 ) -> list[str]:
@@ -652,6 +884,7 @@ def run(
                 tasks_per_sec=round(tps),
                 wall_s=round(r["wall"], 2),
                 compile_s=round(r["compile"], 2),
+                compile_warm_s=round(r["compile_warm"], 2),
                 done=f"{r['done']}/{n_tasks}",
                 speedup=round(tps / ev_tps, 1),
             ))
@@ -661,6 +894,7 @@ def run(
     rows.extend(_doneprobe_row())
     rows.extend(_oracle_gap_row())
     rows.extend(_fault_smoke_row())
+    rows.extend(_donation_row())
     if faults:
         rows.extend(_fault_rows(full))
     if trace:
@@ -669,6 +903,8 @@ def run(
         rows.extend(_breakdown_rows())
     if steady:
         rows.extend(_steady_rows(full))
+    if sharded:
+        rows.extend(_sharded_rows(full))
     if bench_json:
         write_bench_json(_BENCH_ROWS, bench_json)
     return rows
@@ -706,6 +942,16 @@ if __name__ == "__main__":
     ap.add_argument("--only-steady", action="store_true",
                     help="print just the steady-state rows (the CI "
                          "streaming smoke entrypoint)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the mesh-sharded sweep rows (device-parallel "
+                         "fig2 grids + lane-batched steady state)")
+    ap.add_argument("--only-sharded", action="store_true",
+                    help="print just the mesh-sharded rows (the CI "
+                         "sharded smoke entrypoint)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip enabling the persistent JAX compilation "
+                         "cache (on by default; dir from "
+                         "$JAX_COMPILE_CACHE_DIR or .jax_compile_cache)")
     ap.add_argument("--trace-out", default="simx_trace.json",
                     help="Chrome-trace JSON output path (default "
                          "simx_trace.json)")
@@ -714,6 +960,8 @@ if __name__ == "__main__":
                          "into ('none' disables)")
     args = ap.parse_args()
     bench_json = None if args.bench_json.lower() == "none" else args.bench_json
+    if not args.no_compile_cache:
+        enable_compile_cache()
     if args.only_faults:
         out = _fault_smoke_row() + (_fault_rows(args.full) if args.faults else [])
     elif args.only_bigjob:
@@ -726,9 +974,12 @@ if __name__ == "__main__":
         out = _breakdown_rows()
     elif args.only_steady:
         out = _steady_rows(args.full)
+    elif args.only_sharded:
+        out = _sharded_rows(args.full)
     else:
         out = run(full=args.full, faults=args.faults, trace=args.trace,
                   breakdown=args.breakdown, steady=args.steady,
+                  sharded=args.sharded,
                   trace_out=args.trace_out, bench_json=None)
     if bench_json:
         write_bench_json(_BENCH_ROWS, bench_json)

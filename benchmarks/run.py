@@ -19,6 +19,10 @@ def main() -> None:
     ap.add_argument("--trace", action="store_true",
                     help="add the simx telemetry trace rows (writes the "
                          "Chrome-trace JSON)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the simx mesh-sharded sweep rows "
+                         "(device-parallel fig2 grids + lane-batched "
+                         "steady state)")
     ap.add_argument("--bench-json", default="BENCH_simx.json",
                     help="simx trajectory file to merge rows into "
                          "('none' disables)")
@@ -60,6 +64,8 @@ def main() -> None:
                 kw["faults"] = True
             if args.trace:
                 kw["trace"] = True
+            if args.sharded:
+                kw["sharded"] = True
         for row in suites[name].run(full=args.full, **kw):
             print(row)
         print(f"suite_{name}_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",

@@ -40,7 +40,7 @@ from repro.analysis.specs import SpecError, check_state, dims_for, missing_specs
 
 
 def _known_pytrees():
-    from repro.simx import eagle, faults, megha, pigeon, provenance, sparrow
+    from repro.simx import eagle, faults, megha, pigeon, provenance, shard, sparrow
     from repro.simx import state as st
     from repro.simx import telemetry as tlm
 
@@ -50,6 +50,7 @@ def _known_pytrees():
         faults.FaultSchedule, provenance.Provenance,
         megha.MeghaLayout, sparrow.ProbeLayout, eagle.EagleLayout,
         pigeon.PigeonLayout, tlm.Timeline, tlm.QuantileSketch,
+        shard.GridShard,
     )
 
 
@@ -221,6 +222,41 @@ def check_stream_layouts() -> None:
             check_state(layout, dict(dims), where=f"stream[{name}].layout@refill")
 
 
+def check_sharded_drivers() -> None:
+    """The mesh-sharded executors accept exactly the registered-rule
+    surface: every ``RULES`` name runs a 1x1 grid through
+    ``sharded_sweep_grid`` on a one-device mesh (the batch pytree —
+    ``GridShard`` — is checked on-spec first), and an unregistered name
+    raises instead of silently falling back to a serial path."""
+    import jax.numpy as jnp
+
+    from repro.simx import runtime as rt
+    from repro.simx import shard
+
+    cfg, tasks = _small_setup()
+    submit = tasks.submit[None, :]               # one load row
+    job_submit = jnp.zeros((1, tasks.num_jobs), jnp.float32)
+    seeds = jnp.zeros((1,), jnp.int32)
+    gs, rows, cols = shard.make_grid_shard(submit, job_submit, seeds)
+    dims = dict(dims_for(cfg, tasks))
+    dims["B"] = rows * cols
+    check_state(gs, dims, where="GridShard")
+    mesh = shard.sweep_mesh(1)
+    for name in rt.RULES:
+        out = shard.sharded_sweep_grid(
+            name, cfg, tasks, submit, job_submit, seeds, 8, mesh=mesh
+        )
+        assert out["p50"].shape == (1, 1), (name, out["p50"].shape)
+    try:
+        shard.sharded_sweep_grid(
+            "nosuchrule", cfg, tasks, submit, job_submit, seeds, 8, mesh=mesh
+        )
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("sharded_sweep_grid accepted an unknown rule")
+
+
 def run_all() -> Report:
     rep = Report()
     rep.run("coverage", check_coverage)
@@ -228,6 +264,7 @@ def run_all() -> Report:
     rep.run("step-stability", check_step_stability)
     rep.run("stage-helpers", check_stage_helpers)
     rep.run("stream-layouts", check_stream_layouts)
+    rep.run("sharded-drivers", check_sharded_drivers)
     return rep
 
 

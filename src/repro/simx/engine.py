@@ -180,7 +180,9 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def make_chunk_runner(step: Callable, chunk: int = 256) -> Callable:
+def make_chunk_runner(
+    step: Callable, chunk: int = 256, donate: bool = False
+) -> Callable:
     """Jit a ``chunk``-round advance of ``step``; reuse it across runs to
     amortize compilation (a fresh jit per call would recompile).
 
@@ -188,14 +190,23 @@ def make_chunk_runner(step: Callable, chunk: int = 256) -> Callable:
     INSIDE the compiled chunk, so ``run_to_completion``'s host check reads
     one ready scalar instead of dispatching a second device program per
     chunk (``bench_simx.py`` reports the saved dispatch overhead as the
-    ``simx_doneprobe`` row)."""
+    ``simx_doneprobe`` row).
+
+    ``donate=True`` donates the carried state to the compiled chunk
+    (``donate_argnums``) so XLA updates it in place instead of holding the
+    old and new state live across each call — halving the carried-state
+    footprint of the chunk loop.  The caller's input buffer is consumed:
+    only the returned state is valid after the call (the ``simx_donation``
+    bench row reports the measured wall/peak-memory deltas).  Off by
+    default because callers that re-read a prior state (the doneprobe
+    bench keeps every chunk's state alive) would see garbage."""
 
     def run(c):
         c = scan_rounds(step, c, chunk)
         s = runtime.carry_state(c)
         return c, jnp.all(s.task_finish <= s.t)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
 @partial(jax.jit, static_argnums=(0, 2))
@@ -219,6 +230,7 @@ def run_to_completion(
     chunk: int = 256,
     max_rounds: int = 1_000_000,
     runner: Optional[Callable] = None,
+    donate: bool = False,
 ):
     """Drive ``step`` in jitted ``chunk``-round scans until every task is
     done (or ``max_rounds`` as a runaway guard).  Returns the final state.
@@ -227,12 +239,19 @@ def run_to_completion(
     amortize compilation across runs; it MUST advance exactly ``chunk``
     rounds per call — pass the same chunk to both.
 
+    ``donate=True`` builds the internal runner with state donation (see
+    ``make_chunk_runner``); the caller's ``state`` argument is consumed.
+    Ignored when a prebuilt ``runner`` is supplied — donation is a
+    property of the compiled runner itself.
+
     ``max_rounds`` is exact: a final partial chunk runs through the jitted
     remainder runner (``_run_tail``), so the state never advances past the
     budget (this is what makes an ``until`` horizon cap precise) and a
     near-boundary budget stays on the compiled fast path."""
     runtime.check_round_budget(max_rounds, "run_to_completion(max_rounds=...)")
-    run_chunk = runner if runner is not None else make_chunk_runner(step, chunk)
+    run_chunk = (
+        runner if runner is not None else make_chunk_runner(step, chunk, donate)
+    )
     rounds = 0
     while rounds < max_rounds:
         n = min(chunk, max_rounds - rounds)

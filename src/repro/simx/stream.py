@@ -553,21 +553,16 @@ class _StreamWindow:
 # ---------------------------------------------------------------------------
 
 
-def _make_segment(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
+def _segment_core(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
                   match_fn, pick_fn, telemetry: Optional[tlm.TelemetryConfig] = None,
                   stride: int = 1, provenance: bool = False):
-    """One compiled ``num_rounds``-round advance: build the rule's step
-    from the *traced* window arrays + layout, scan, absorb the segment's
-    completed-job delays into the sketch, and sample the gauges.  Window
-    shapes and layout capacities are static, so every refill reuses the
-    one compilation.
-
-    With ``telemetry`` (and ``stride``, which must divide ``num_rounds``)
-    the scan runs through ``telemetry.scan_blocks`` and the segment
-    additionally returns the per-window counter/gauge series — the host
-    concatenates them across refill boundaries into one ``Timeline``.
-    With ``provenance`` the carry is ``(state, Provenance)`` and the
-    lifecycle arrays ride through the scan (remapped by ``refill``)."""
+    """The UN-jitted segment function ``_make_segment`` compiles: one
+    ``num_rounds``-round advance ``seg(carry, win_tasks, layout, sketch)``
+    building the rule's step from the *traced* window arrays + layout,
+    scanning, absorbing the segment's completed-job delays into the
+    sketch, and sampling the gauges.  Exposed separately so
+    ``shard._batched_segment`` can ``jax.vmap`` it over a lane axis before
+    jitting — the serial and batched segments share this one body."""
     if match_fn is None:
         match_fn = rt.default_match_fn()
     if pick_fn is None:
@@ -605,7 +600,6 @@ def _make_segment(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
             )
         raise ValueError(f"no streaming segment for rule {rule!r}")
 
-    @jax.jit
     def seg(carry, win_tasks, layout, sketch):
         step = build_step(win_tasks, layout)
         if tele:
@@ -637,6 +631,27 @@ def _make_segment(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
         )
         return carry, sketch, gauges, blocks
 
+    return seg
+
+
+def _make_segment(rule: str, cfg: SimxConfig, key: jax.Array, num_rounds: int,
+                  match_fn, pick_fn, telemetry: Optional[tlm.TelemetryConfig] = None,
+                  stride: int = 1, provenance: bool = False):
+    """One compiled ``num_rounds``-round advance (``_segment_core`` under
+    ``jax.jit``).  Window shapes and layout capacities are static, so
+    every refill reuses the one compilation.
+
+    With ``telemetry`` (and ``stride``, which must divide ``num_rounds``)
+    the scan runs through ``telemetry.scan_blocks`` and the segment
+    additionally returns the per-window counter/gauge series — the host
+    concatenates them across refill boundaries into one ``Timeline``.
+    With ``provenance`` the carry is ``(state, Provenance)`` and the
+    lifecycle arrays ride through the scan (remapped by ``refill``)."""
+    core = _segment_core(
+        rule, cfg, key, num_rounds, match_fn, pick_fn,
+        telemetry=telemetry, stride=stride, provenance=provenance,
+    )
+    seg = jax.jit(core)
     return seg
 
 

@@ -285,6 +285,7 @@ def sweep_grid(
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
     provenance: bool = False,
+    donate: bool = False,
 ) -> dict[str, jax.Array]:
     """Run the whole (load x seed) grid as one jitted vmap-of-vmap program.
 
@@ -296,6 +297,12 @@ def sweep_grid(
     simulated task count (for tasks/sec accounting).  ``provenance=True``
     carries the per-task lifecycle arrays through every point and adds the
     ``mean_<component>`` delay-breakdown columns.
+
+    ``donate=True`` donates the submit/job_submit grid buffers to the
+    compiled program (``donate_argnums``), letting XLA reuse their memory
+    as scratch — the grids are consumed on the way in, so callers must
+    re-stack them before running the same grid again.  Off by default:
+    the bench drivers re-run grids from the same host arrays.
     """
     name = scheduler.lower()
     rule = runtime.get_rule(name)  # fail fast on unknown schedulers
@@ -317,9 +324,116 @@ def sweep_grid(
         jax.vmap(                     # loads
             jax.vmap(point, in_axes=(None, None, 0)),  # seeds
             in_axes=(0, 0, None),
-        )
+        ),
+        donate_argnums=(0, 1) if donate else (),
     )
     return grid(submit_grid, job_submit_grid, jnp.asarray(seeds))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:  # simxlint: disable=PT101 — host-side plan, never traced
+    """Everything a Fig. 2 grid run needs, built once: the serial
+    ``fig2_sweep`` and the mesh-sharded ``shard.sharded_fig2_sweep`` both
+    consume one of these, so their inputs are byte-identical and parity
+    between the two paths is a property of the executors alone."""
+
+    name: str
+    cfg: SimxConfig
+    tasks: TaskArrays
+    submit_grid: jax.Array       # float32[L, T]
+    job_submit_grid: jax.Array   # float32[L, J]
+    seeds: jax.Array             # int[S]
+    num_rounds: int
+    match_fn: MatchFn | None
+    pick_fn: MatchFn | None
+    provenance: bool
+    annotate: dict               # numpy extras merged into the result
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:  # simxlint: disable=PT101 — host-side plan, never traced
+    """The Fig. 4 counterpart of ``SweepPlan``: one batched
+    ``FaultSchedule`` (leading severity axis) instead of submit grids."""
+
+    name: str
+    cfg: SimxConfig
+    tasks: TaskArrays
+    schedules: FaultSchedule     # leaves carry a leading severity axis [F]
+    seeds: jax.Array             # int[S]
+    num_rounds: int
+    match_fn: MatchFn | None
+    pick_fn: MatchFn | None
+    annotate: dict
+
+
+def fig2_plan(
+    scheduler: str,
+    *,
+    loads: Sequence[float] = (0.2, 0.5, 0.8),
+    num_seeds: int = 3,
+    num_workers: int = 10_000,
+    num_jobs: int = 200,
+    tasks_per_job: int = 1000,
+    dt: float = 0.05,
+    slack: float = 4.0,
+    trace_seed: int = 0,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    mem_limit_gb: Optional[float] = 16.0,
+    provenance: bool = False,
+    **cfg_kwargs,
+) -> SweepPlan:
+    """Build the Fig. 2 grid inputs without running them: the load grid,
+    the shared config, and the round budget sized off the slowest point.
+    ``fig2_sweep`` executes a plan serially; ``shard.sharded_fig2_sweep``
+    executes the same plan across a device mesh."""
+    name = scheduler.lower()
+    if runtime.get_rule(name).needs_grid:
+        num_workers = grid_workers(
+            num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
+        )
+    check_probe_memory(
+        name, num_jobs, num_workers, len(loads) * num_seeds,
+        None if mem_limit_gb is None else mem_limit_gb * 2**30,
+        tasks_per_job=tasks_per_job,
+        probe_ratio=cfg_kwargs.get("probe_ratio", 2),
+        reserve_cap=cfg_kwargs.get("reserve_cap", 0),
+    )
+    cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
+    tasks, submit_g, job_submit_g = make_load_grid(
+        loads,
+        num_jobs=num_jobs,
+        tasks_per_job=tasks_per_job,
+        num_workers=num_workers,
+        seed=trace_seed,
+    )
+    num_rounds = max(
+        engine.estimate_rounds(
+            cfg,
+            dataclasses.replace(tasks, submit=submit_g[i], job_submit=job_submit_g[i]),
+            slack=slack,
+        )
+        for i in range(len(loads))
+    )
+    return SweepPlan(
+        name=name,
+        cfg=cfg,
+        tasks=tasks,
+        submit_grid=submit_g,
+        job_submit_grid=job_submit_g,
+        seeds=jnp.arange(num_seeds),
+        num_rounds=num_rounds,
+        match_fn=default_match_fn(use_pallas=use_pallas, interpret=interpret),
+        pick_fn=default_match_fn(
+            use_pallas=use_pallas, interpret=interpret, block_rows=1
+        ),
+        provenance=provenance,
+        annotate={
+            "loads": np.asarray(loads),
+            "num_rounds": np.asarray(num_rounds),
+            "num_tasks": np.asarray(tasks.num_tasks),
+        },
+    )
 
 
 def fig2_sweep(
@@ -351,46 +465,21 @@ def fig2_sweep(
     None disables) — with the O(W * R) encoding it is MBs per point and
     the default ceiling never binds at paper scale.
     """
-    name = scheduler.lower()
-    if runtime.get_rule(name).needs_grid:
-        num_workers = grid_workers(
-            num_workers, cfg_kwargs.get("num_gms", 8), cfg_kwargs.get("num_lms", 8)
-        )
-    check_probe_memory(
-        name, num_jobs, num_workers, len(loads) * num_seeds,
-        None if mem_limit_gb is None else mem_limit_gb * 2**30,
-        tasks_per_job=tasks_per_job,
-        probe_ratio=cfg_kwargs.get("probe_ratio", 2),
-        reserve_cap=cfg_kwargs.get("reserve_cap", 0),
-    )
-    cfg = SimxConfig(num_workers=num_workers, dt=dt, **cfg_kwargs)
-    tasks, submit_g, job_submit_g = make_load_grid(
-        loads,
-        num_jobs=num_jobs,
-        tasks_per_job=tasks_per_job,
-        num_workers=num_workers,
-        seed=trace_seed,
-    )
-    num_rounds = max(
-        engine.estimate_rounds(
-            cfg,
-            dataclasses.replace(tasks, submit=submit_g[i], job_submit=job_submit_g[i]),
-            slack=slack,
-        )
-        for i in range(len(loads))
+    plan = fig2_plan(
+        scheduler,
+        loads=loads, num_seeds=num_seeds, num_workers=num_workers,
+        num_jobs=num_jobs, tasks_per_job=tasks_per_job, dt=dt, slack=slack,
+        trace_seed=trace_seed, use_pallas=use_pallas, interpret=interpret,
+        mem_limit_gb=mem_limit_gb, provenance=provenance, **cfg_kwargs,
     )
     out = sweep_grid(
-        name, cfg, tasks, submit_g, job_submit_g, jnp.arange(num_seeds), num_rounds,
-        match_fn=default_match_fn(use_pallas=use_pallas, interpret=interpret),
-        pick_fn=default_match_fn(
-            use_pallas=use_pallas, interpret=interpret, block_rows=1
-        ),
-        provenance=provenance,
+        plan.name, plan.cfg, plan.tasks, plan.submit_grid,
+        plan.job_submit_grid, plan.seeds, plan.num_rounds,
+        match_fn=plan.match_fn, pick_fn=plan.pick_fn,
+        provenance=plan.provenance,
     )
     res = {k: np.asarray(v) for k, v in out.items()}
-    res["loads"] = np.asarray(loads)
-    res["num_rounds"] = np.asarray(num_rounds)
-    res["num_tasks"] = np.asarray(tasks.num_tasks)
+    res.update(plan.annotate)
     return res
 
 
@@ -403,11 +492,14 @@ def fault_sweep_grid(
     num_rounds: int,
     match_fn: MatchFn | None = None,
     pick_fn: MatchFn | None = None,
+    donate: bool = False,
 ) -> dict[str, jax.Array]:
     """Run a (fault severity x seed) grid as one jitted vmap-of-vmap
     program — the Fig. 4 counterpart of ``sweep_grid``.  Returns
     ``point_summary`` fields stacked to ``[F, S]`` arrays (``lost`` counts
-    the in-flight tasks crashes destroyed per point)."""
+    the in-flight tasks crashes destroyed per point).  ``donate=True``
+    donates the batched schedule buffers to the program (same contract as
+    ``sweep_grid``: the schedule is consumed, rebuild before rerunning)."""
     name = scheduler.lower()
     rule = runtime.get_rule(name)  # fail fast on unknown schedulers
 
@@ -422,12 +514,13 @@ def fault_sweep_grid(
         jax.vmap(                     # fault severities
             jax.vmap(point, in_axes=(None, 0)),  # seeds
             in_axes=(0, None),
-        )
+        ),
+        donate_argnums=(0,) if donate else (),
     )
     return grid(schedules, jnp.asarray(seeds))
 
 
-def fig4_sweep(
+def fig4_plan(
     scheduler: str,
     *,
     fractions: Sequence[float] = (0.0, 0.02, 0.05, 0.1),
@@ -448,18 +541,11 @@ def fig4_sweep(
     interpret: bool = True,
     mem_limit_gb: Optional[float] = 16.0,
     **cfg_kwargs,
-) -> dict[str, np.ndarray]:
-    """The Fig. 4 availability study: one compiled (severity x seed) grid.
-
-    Each severity point crashes ``fraction * num_workers`` random workers
-    at ``fail_time`` (default: mid-arrival-span) for ``outage`` seconds —
-    plus, for megha, ``gm_outages`` GMs over the same window and an
-    optional heartbeat-delay perturbation.  The qualitative signature to
-    expect mirrors the paper's §3.5 claim: megha's eventually-consistent
-    state absorbs the crashes (stale views are repaired by the normal
-    inconsistency/heartbeat machinery), while pigeon's static groups park
-    work behind dead workers until they return.
-    """
+) -> FaultPlan:
+    """Build the Fig. 4 grid inputs without running them: the batched
+    severity schedule, the trace, and the outage-extended round budget.
+    ``fig4_sweep`` executes a plan serially; ``shard.sharded_fig4_sweep``
+    executes the same plan across a device mesh."""
     name = scheduler.lower()
     if runtime.get_rule(name).needs_grid:
         num_workers = grid_workers(
@@ -498,17 +584,73 @@ def fig4_sweep(
     num_rounds = engine.estimate_rounds(cfg, tasks, slack=slack) + int(
         math.ceil((fail_time + outage) / dt)
     )
-    out = fault_sweep_grid(
-        name, cfg, tasks, schedules, jnp.arange(num_seeds), num_rounds,
+    return FaultPlan(
+        name=name,
+        cfg=cfg,
+        tasks=tasks,
+        schedules=schedules,
+        seeds=jnp.arange(num_seeds),
+        num_rounds=num_rounds,
         match_fn=default_match_fn(use_pallas=use_pallas, interpret=interpret),
         pick_fn=default_match_fn(
             use_pallas=use_pallas, interpret=interpret, block_rows=1
         ),
+        annotate={
+            "fractions": np.asarray(fractions),
+            "fail_time": np.asarray(fail_time),
+            "outage": np.asarray(outage),
+            "num_rounds": np.asarray(num_rounds),
+            "num_tasks": np.asarray(tasks.num_tasks),
+        },
+    )
+
+
+def fig4_sweep(
+    scheduler: str,
+    *,
+    fractions: Sequence[float] = (0.0, 0.02, 0.05, 0.1),
+    fail_time: Optional[float] = None,
+    outage: float = 2.0,
+    gm_outages: int = 0,
+    heartbeat_delay: float = 0.0,
+    num_seeds: int = 2,
+    load: float = 0.8,
+    num_workers: int = 1024,
+    num_jobs: int = 32,
+    tasks_per_job: int = 128,
+    dt: float = 0.05,
+    slack: float = 6.0,
+    trace_seed: int = 0,
+    fault_seed: int = 0,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    mem_limit_gb: Optional[float] = 16.0,
+    **cfg_kwargs,
+) -> dict[str, np.ndarray]:
+    """The Fig. 4 availability study: one compiled (severity x seed) grid.
+
+    Each severity point crashes ``fraction * num_workers`` random workers
+    at ``fail_time`` (default: mid-arrival-span) for ``outage`` seconds —
+    plus, for megha, ``gm_outages`` GMs over the same window and an
+    optional heartbeat-delay perturbation.  The qualitative signature to
+    expect mirrors the paper's §3.5 claim: megha's eventually-consistent
+    state absorbs the crashes (stale views are repaired by the normal
+    inconsistency/heartbeat machinery), while pigeon's static groups park
+    work behind dead workers until they return.
+    """
+    plan = fig4_plan(
+        scheduler,
+        fractions=fractions, fail_time=fail_time, outage=outage,
+        gm_outages=gm_outages, heartbeat_delay=heartbeat_delay,
+        num_seeds=num_seeds, load=load, num_workers=num_workers,
+        num_jobs=num_jobs, tasks_per_job=tasks_per_job, dt=dt, slack=slack,
+        trace_seed=trace_seed, fault_seed=fault_seed, use_pallas=use_pallas,
+        interpret=interpret, mem_limit_gb=mem_limit_gb, **cfg_kwargs,
+    )
+    out = fault_sweep_grid(
+        plan.name, plan.cfg, plan.tasks, plan.schedules, plan.seeds,
+        plan.num_rounds, match_fn=plan.match_fn, pick_fn=plan.pick_fn,
     )
     res = {k: np.asarray(v) for k, v in out.items()}
-    res["fractions"] = np.asarray(fractions)
-    res["fail_time"] = np.asarray(fail_time)
-    res["outage"] = np.asarray(outage)
-    res["num_rounds"] = np.asarray(num_rounds)
-    res["num_tasks"] = np.asarray(tasks.num_tasks)
+    res.update(plan.annotate)
     return res
